@@ -1,0 +1,31 @@
+"""Shared benchmark utilities.
+
+Timing protocol mirrors the paper's §V-A: repeat, drop the min and max
+observations, average the rest.  (The paper uses 100 reps on phones; we
+default to fewer on this 1-core CPU container — the protocol, not the
+absolute timings, is what reproduces.)
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def bench(fn: Callable, *args, reps: int = 12, warmup: int = 2) -> float:
+    """Median-style paper timing: mean after dropping min & max. Seconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    obs = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        obs.append(time.perf_counter() - t0)
+    obs.sort()
+    trimmed = obs[1:-1] if len(obs) > 2 else obs
+    return sum(trimmed) / len(trimmed)
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

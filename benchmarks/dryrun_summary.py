@@ -1,0 +1,65 @@
+"""Summarize results/dryrun/*.json into the §Dry-run table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def fmt_bytes(n) -> str:
+    try:
+        n = float(n)
+    except (TypeError, ValueError):
+        return "?"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{unit}"
+        n /= 1024
+    return f"{n:.1f}PB"
+
+
+def build(results_dir: str = "results/dryrun", variants: bool = False) -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        if not variants and (".g1" in base or ".g2" in base):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        status = r.get("status", "?")
+        if status == "ok":
+            mem = r.get("memory", {})
+            coll = r.get("collectives", {})
+            coll_desc = " ".join(f"{k}:{v['count']}" for k, v in
+                                 sorted(coll.items())) or "none"
+            temp = fmt_bytes(mem.get("temp_bytes"))
+            args = fmt_bytes(mem.get("argument_bytes"))
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} | ok "
+                        f"({r.get('compile_seconds', '?')}s) | {args} | {temp} "
+                        f"| {coll_desc} |")
+        elif status == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | both | skipped | — | — "
+                        f"| {r.get('reason', '')[:60]} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r.get('mesh','?')} "
+                        f"| **{status}** | — | — | "
+                        f"{str(r.get('error', ''))[:80]} |")
+    header = ("| arch | shape | mesh | status (compile) | args/dev | temp/dev "
+              "| collectives |\n|---|---|---|---|---|---|---|")
+    return header + "\n" + "\n".join(rows)
+
+
+def run():
+    """CSV rows for benchmarks.run: count of ok/skip/error."""
+    import collections
+    counts = collections.Counter()
+    for path in glob.glob("results/dryrun/*.json"):
+        if ".g1" in path or ".g2" in path:
+            continue
+        with open(path) as f:
+            counts[json.load(f).get("status", "?")] += 1
+    return [f"dryrun.pairs.{k},{v}," for k, v in sorted(counts.items())]
+
+
+if __name__ == "__main__":
+    print(build())

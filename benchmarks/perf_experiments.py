@@ -1,0 +1,159 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: three (arch x shape) pairs, hypothesis-driven.
+
+Run in a fresh process (locks 512 host devices):
+  PYTHONPATH=src python -m benchmarks.perf_experiments [--exp 1|2|3]
+
+Pairs (chosen from the §Roofline baseline table):
+  1. granite-moe-1b-a400m x train_4k   — most collective-bound pair.
+     Hypothesis: with d_ff=512 experts, the top-8 dispatch all-to-all
+     (~4x k x token-bytes) dwarfs expert compute; replicating experts
+     across 'model' (expert-data-parallelism) removes the a2a entirely at
+     a replicated-weight cost of only ~2.4 GB bf16.
+  2. command-r-plus-104b x train_4k    — largest compute term (dense 104B).
+     Hypothesis: full remat re-executes every matmul (~4F executed);
+     checkpointing dot outputs ('dots' policy) cuts executed FLOPs ~25%
+     for ~2x activation checkpoint memory, which the 16 GB budget allows
+     at B/device=1.
+  3. qwen2-7b x decode_32k             — the paper-representative pair:
+     serving under inexact computing.  Hypothesis: decode is memory-bound
+     (weights + KV ~ 1.9 GB/chip/step); INT8 weights (the paper's
+     imprecise mode, C4) cut the weight stream 2x -> memory term ~ -25%.
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+
+def _metrics(compiled, mesh_chips=256):
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    from repro.launch.dryrun import collective_stats
+    coll = collective_stats(compiled.as_text())
+    return {
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_per_device": cost.get("bytes accessed", 0.0),
+        "temp_gb": mem.temp_size_in_bytes / 1e9,
+        "arg_gb": mem.argument_size_in_bytes / 1e9,
+        "collectives": coll,
+        "collective_bytes": sum(v["bytes"] for v in coll.values()),
+    }
+
+
+def lower_train(cfg, layers_override=2):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_lowering
+    from repro.nn.sharding import activate_mesh
+    if layers_override:
+        cfg = dataclasses.replace(
+            cfg, num_layers=layers_override * cfg.pattern_period,
+            encoder_layers=(layers_override if cfg.encoder_layers else 0))
+    mesh = make_production_mesh()
+    spec = build_lowering(cfg, "train_4k", mesh)
+    with mesh, activate_mesh(mesh):
+        compiled = jax.jit(spec.fn, donate_argnums=spec.donate) \
+            .lower(*spec.args).compile()
+    return _metrics(compiled)
+
+
+def lower_decode(cfg, int8=False):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.precision import ComputeMode, QuantizedTensor
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_lowering
+    from repro.nn.sharding import activate_mesh
+    mesh = make_production_mesh()
+    mode = ComputeMode.IMPRECISE_INT8 if int8 else ComputeMode.RELAXED
+    spec = build_lowering(cfg, "decode_32k", mesh, mode=mode)
+    args = list(spec.args)
+    if int8:
+        # weight leaves (ndim >= 2, projection names) -> int8 + f32 scale
+        params = args[0]
+        QUANT = {"wq", "wk", "wv", "wo", "wg", "wu", "wd", "w_in", "w_out",
+                 "lm_head", "w_gates", "w_ff_g", "w_ff_u", "w_ff_d", "w_dt"}
+        def q(path, leaf):
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            if name in QUANT and leaf.ndim >= 2:
+                # stacked block weights keep the layer-group axis on the
+                # scale so the decode scan sees matching leading dims
+                if leaf.ndim >= 3:
+                    scale_shape = (leaf.shape[0],) + (1,) * (leaf.ndim - 2) \
+                        + (leaf.shape[-1],)
+                else:
+                    scale_shape = (1, leaf.shape[-1])
+                return QuantizedTensor(
+                    q=jax.ShapeDtypeStruct(leaf.shape, jnp.int8,
+                                           sharding=leaf.sharding),
+                    scale=jax.ShapeDtypeStruct(scale_shape, jnp.float32))
+            return leaf
+        args[0] = jax.tree_util.tree_map_with_path(
+            q, params, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    with mesh, activate_mesh(mesh):
+        compiled = jax.jit(spec.fn, donate_argnums=spec.donate) \
+            .lower(*args).compile()
+    return _metrics(compiled)
+
+
+def exp1():
+    from repro.configs import get_config
+    cfg = get_config("granite-moe-1b-a400m")
+    base = lower_train(cfg, layers_override=2)
+    cfg_rep = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, expert_parallel=False))
+    var = lower_train(cfg_rep, layers_override=2)
+    return {"name": "granite_expert_replication", "baseline": base,
+            "variant": var}
+
+
+def exp2():
+    from repro.configs import get_config
+    cfg = get_config("command-r-plus-104b")
+    base = lower_train(cfg, layers_override=1)
+    var = lower_train(dataclasses.replace(cfg, remat_policy="dots"),
+                      layers_override=1)
+    return {"name": "commandr_remat_dots", "baseline": base, "variant": var}
+
+
+def exp3():
+    from repro.configs import get_config
+    cfg = get_config("qwen2-7b")
+    base = lower_decode(cfg, int8=False)
+    var = lower_decode(cfg, int8=True)
+    return {"name": "qwen2_decode_int8", "baseline": base, "variant": var}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", type=int, default=0)
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    exps = {1: exp1, 2: exp2, 3: exp3}
+    run = [args.exp] if args.exp else [1, 2, 3]
+    for i in run:
+        t0 = time.time()
+        try:
+            res = exps[i]()
+            res["seconds"] = round(time.time() - t0, 1)
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            res = {"name": f"exp{i}", "status": "error", "error": str(e)}
+        path = os.path.join(args.out, f"exp{i}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1, default=str)
+        print(json.dumps(res, indent=1, default=str)[:1500])
+
+
+if __name__ == "__main__":
+    main()

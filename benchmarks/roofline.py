@@ -1,0 +1,307 @@
+"""Roofline analysis: three terms per (arch x shape) on the single-pod mesh.
+
+    compute term    = FLOPs / (chips x 197 TF/s bf16)
+    memory term     = HBM bytes / (chips x 819 GB/s)
+    collective term = collective bytes / (chips x 50 GB/s link)
+
+Two complementary sources, both reported:
+
+  1. ANALYTIC model (authoritative for the roofline terms): exact FLOP /
+     byte / collective counts derived from the architecture config, the
+     input shape, and our sharding policy.  Needed because XLA's
+     HloCostAnalysis counts scan (while-loop) bodies ONCE — the layer-stack
+     scan and the chunked-attention scans make raw cost_analysis numerically
+     meaningless for deep models (verified experimentally; see
+     EXPERIMENTS.md §Roofline method).
+  2. HLO view: cost_analysis() + parsed collective ops from the compiled
+     dry-run, trip-count-corrected by lowering reduced-depth variants
+     (G=1, G=2) and extrapolating linearly in G — catches anything the
+     analytic model forgot (its totals are cross-checked against #1).
+
+MODEL_FLOPS = 6 * N_active * D per the assignment; ratio MODEL_FLOPS /
+executed-FLOPs exposes remat/attention/dispatch overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import math
+import os
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from repro.configs import get_config
+from repro.launch.specs import SHAPES, shape_skipped, window_override_for
+from repro.nn.config import ModelConfig
+from repro.nn.model import active_params, num_params
+
+# --- TPU v5e constants (per chip) ---
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+CHIPS = 256                  # single-pod 16x16
+TP = 16                      # model-parallel width
+DP = 16                      # data-parallel width
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model
+# ---------------------------------------------------------------------------
+
+def _per_token_block_flops(cfg: ModelConfig, kind: str, ctx_len: float,
+                           window: int) -> float:
+    """Forward FLOPs per token for one layer of ``kind`` (projections +
+    attention/scan work at average context ``ctx_len``)."""
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    f = cfg.d_ff
+    fl = 0.0
+    if kind in ("attn", "attn_local", "attn_global", "cross", "hybrid"):
+        eff_ctx = min(ctx_len, window) if window > 0 else ctx_len
+        fl += 2 * d * (h * hd) + 2 * 2 * d * (kv * hd) + 2 * (h * hd) * d
+        fl += 4 * h * hd * eff_ctx                       # scores + AV
+        if kind == "cross":
+            se = cfg.encoder_seq or cfg.num_image_tokens
+            fl += 2 * d * (h * hd) + 2 * (h * hd) * d    # q & o proj
+            fl += 4 * h * hd * se                        # cross attn
+            # k/v over Se tokens amortized across S decoder tokens: ~small,
+            # charged to prefill/aux below; ignored per-token
+        if kind == "hybrid":
+            fl += _mamba_flops(cfg)
+        if cfg.moe is not None:
+            fl += 2 * d * cfg.moe.num_experts            # router
+            fl += cfg.moe.top_k * 3 * 2 * d * f          # expert gated MLP
+        elif f > 0:
+            fl += 3 * 2 * d * f                          # gated MLP
+    elif kind == "mlstm":
+        di = 2 * d
+        hdm = di // h
+        fl += 2 * d * 2 * di + 3 * 2 * di * di + 2 * di * d
+        fl += 8 * di * hdm                               # cell matrix update+read
+    elif kind == "slstm":
+        f43 = max((4 * d // 3 + 127) // 128 * 128, 128)
+        fl += 2 * d * 4 * d + 30 * d + 3 * 2 * d * f43
+    return fl
+
+
+def _mamba_flops(cfg: ModelConfig) -> float:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    n = cfg.ssm.state_dim
+    return (2 * d * 2 * di + 2 * di * di + 2 * 2 * di * n + 2 * di * d
+            + 2 * cfg.ssm.conv_width * di + 10 * di * n)
+
+
+def forward_flops_per_token(cfg: ModelConfig, ctx_len: float,
+                            window_override: int) -> float:
+    total = 0.0
+    groups = cfg.num_groups
+    for kind in cfg.block_pattern:
+        w = cfg.sliding_window if kind in ("attn_local", "hybrid") else \
+            (window_override if window_override > 0 else 0)
+        total += groups * _per_token_block_flops(cfg, kind, ctx_len, w)
+    total += 2 * cfg.d_model * cfg.vocab_size            # unembed
+    return total
+
+
+def encoder_flops(cfg: ModelConfig, batch: int) -> float:
+    if not cfg.is_encoder_decoder:
+        return 0.0
+    d, f = cfg.d_model, cfg.d_ff
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    se = cfg.encoder_seq
+    per_tok = 2 * d * h * hd * 4 + 4 * h * hd * se + 3 * 2 * d * f
+    return batch * se * cfg.encoder_layers * per_tok
+
+
+@dataclass
+class AnalyticCosts:
+    flops_global: float          # executed FLOPs for one step (global)
+    hbm_bytes_device: float      # HBM traffic per chip
+    coll_bytes_device: float     # collective bytes per chip (egress)
+    model_flops: float           # 6 * N_active * D (train) or 2*N*D (infer)
+    notes: str = ""
+
+
+def analytic_costs(cfg: ModelConfig, shape: str) -> AnalyticCosts:
+    info = SHAPES[shape]
+    seq, batch, kind = info["seq_len"], info["global_batch"], info["kind"]
+    wo = window_override_for(cfg, shape)
+    n_act = active_params(cfg)
+    n_tot = num_params(cfg)
+    p_dev_b = n_tot / CHIPS          # fully sharded (train / 2-D infer)
+    p_dev_tp = n_tot / TP            # TP-only sharded (infer default)
+    d, layers = cfg.d_model, cfg.num_layers
+    bpe = 2                          # bf16
+
+    if kind == "train":
+        tokens = batch * seq
+        fwd = tokens * forward_flops_per_token(cfg, seq / 2, wo) \
+            + encoder_flops(cfg, batch)
+        executed = 4 * fwd                    # fwd + bwd(2x) + remat fwd
+        model = 6 * n_act * tokens
+        # HBM per chip: params read 3 passes (f32) + grads r/w + moments r/w
+        weight_traffic = p_dev_b * (4 * 3 + 4 * 2 + 8 * 2)
+        # activations: written fwd, read bwd, recomputed under remat (~4x),
+        # sharded over data (batch) and model (hidden) axes
+        act_traffic = 4 * (tokens / DP) * d * bpe * layers * 2 / TP
+        hbm = weight_traffic + act_traffic
+        # collectives per chip: TP all-reduce 2/layer fwd + 2 bwd on (B_dev,S,d)
+        act_dev = (tokens / DP) * d * bpe
+        coll = 4 * layers * 2 * act_dev / TP
+        # FSDP: all-gather params fwd+bwd + reduce-scatter grads
+        coll += 3 * (n_tot / TP) * bpe
+        if cfg.moe is not None:
+            tok_b = (tokens / DP) * d * bpe
+            coll += 2 * 2 * cfg.moe.top_k * tok_b * layers / layers  # a2a pair
+        return AnalyticCosts(executed, hbm, coll, model)
+
+    if kind == "prefill":
+        tokens = batch * seq
+        fwd = tokens * forward_flops_per_token(cfg, seq / 2, wo) \
+            + encoder_flops(cfg, batch)
+        model = 2 * n_act * tokens
+        p_dev = p_dev_b if cfg.shard_weights_2d_infer else p_dev_tp
+        kv_bytes = (cfg.num_layers * 2 * cfg.num_kv_heads
+                    * cfg.resolved_head_dim * tokens * bpe) / CHIPS
+        act = 2 * (tokens / DP) * d * bpe * layers / TP
+        hbm = p_dev * bpe + act + kv_bytes
+        coll = 2 * layers * 2 * (tokens / DP) * d * bpe / TP
+        if cfg.shard_weights_2d_infer:
+            coll += n_tot / TP * bpe          # weight all-gather per step
+        if cfg.moe is not None:
+            coll += 4 * cfg.moe.top_k * (tokens / DP) * d * bpe
+        return AnalyticCosts(fwd, hbm, coll, model)
+
+    # decode: one token per sequence
+    ctx = seq if wo == 0 else min(seq, wo)
+    tokens = batch
+    fwd = tokens * forward_flops_per_token(cfg, ctx, wo)
+    model = 2 * n_act * tokens
+    p_dev = p_dev_b if cfg.shard_weights_2d_infer else p_dev_tp
+    # KV cache bytes per chip actually read this step
+    kv_read = _decode_cache_bytes(cfg, batch, seq, wo) / CHIPS
+    hbm = p_dev * bpe + kv_read
+    coll = 2 * layers * 2 * (tokens / max(min(DP, batch), 1)) * d * bpe / TP
+    if cfg.shard_weights_2d_infer:
+        coll += n_tot / TP * bpe
+    if cfg.moe is not None:
+        coll += 4 * cfg.moe.top_k * tokens * d * bpe / min(DP, batch)
+    return AnalyticCosts(fwd, hbm, coll, model)
+
+
+def _decode_cache_bytes(cfg: ModelConfig, batch: int, seq: int,
+                        wo: int) -> float:
+    total = 0.0
+    kvb = 2 * cfg.num_kv_heads * cfg.resolved_head_dim * 2  # k+v bf16
+    for kind in cfg.block_pattern:
+        if kind in ("attn", "attn_local", "attn_global", "cross", "hybrid"):
+            w = cfg.sliding_window if kind in ("attn_local", "hybrid") else \
+                (wo if wo > 0 else 0)
+            cap = min(seq, w) if w > 0 else seq
+            total += cfg.num_groups * batch * cap * kvb
+        elif kind == "mlstm":
+            di = 2 * cfg.d_model
+            total += cfg.num_groups * batch * (cfg.num_heads
+                                               * (di // cfg.num_heads) ** 2) * 4
+        elif kind == "slstm":
+            total += cfg.num_groups * batch * 4 * cfg.d_model * 4
+    if cfg.ssm is not None and "hybrid" in cfg.block_pattern:
+        di = cfg.ssm.expand * cfg.d_model
+        total += cfg.num_layers * batch * di * cfg.ssm.state_dim * 4
+    return total
+
+
+def roofline_terms(c: AnalyticCosts) -> Dict[str, float]:
+    compute = c.flops_global / (CHIPS * PEAK_FLOPS)
+    memory = c.hbm_bytes_device / HBM_BW
+    collective = c.coll_bytes_device / LINK_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute, "memory_s": memory,
+            "collective_s": collective, "dominant": dominant,
+            "model_flops": c.model_flops,
+            "useful_ratio": (c.model_flops / c.flops_global
+                             if c.flops_global else 0.0)}
+
+
+# ---------------------------------------------------------------------------
+# HLO view: trip-count-corrected cost_analysis from dry-run JSONs
+# ---------------------------------------------------------------------------
+
+def load_dryrun(results_dir: str, arch: str, shape: str, mesh: str = "16x16",
+                g: int = 0) -> Optional[dict]:
+    tag = f"{arch}.{shape}.{mesh}" + (f".g{g}" if g else "")
+    path = os.path.join(results_dir, tag + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        data = json.load(f)
+    return data if data.get("status") == "ok" else data
+
+
+def corrected_hlo(results_dir: str, arch: str, shape: str,
+                  groups_full: int) -> Optional[dict]:
+    """Linear-in-G extrapolation from the g1/g2 variants."""
+    g1 = load_dryrun(results_dir, arch, shape, g=1)
+    g2 = load_dryrun(results_dir, arch, shape, g=2)
+    if not g1 or not g2 or g1.get("status") != "ok" or g2.get("status") != "ok":
+        return None
+    out = {}
+    for key in ("flops_per_device", "bytes_accessed_per_device"):
+        t1, t2 = g1.get(key, 0.0), g2.get(key, 0.0)
+        out[key] = t1 + (t2 - t1) * (groups_full - 1)
+    c1 = sum(v["bytes"] for v in g1.get("collectives", {}).values())
+    c2 = sum(v["bytes"] for v in g2.get("collectives", {}).values())
+    out["collective_bytes"] = c1 + (c2 - c1) * (groups_full - 1)
+    out["collective_kinds_full"] = None
+    return out
+
+
+def build_table(results_dir: str = "results/dryrun") -> str:
+    """Markdown roofline table for EXPERIMENTS.md §Roofline."""
+    from repro.launch.sweep import ARCHS, SHAPES as SWEEP_SHAPES
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful FLOPs ratio | HLO-corr FLOPs/dev | status |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SWEEP_SHAPES:
+            if shape_skipped(cfg, shape):
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                             f"skipped (DESIGN.md) |")
+                continue
+            dr = load_dryrun(results_dir, arch, shape)
+            status = dr.get("status") if dr else "missing"
+            c = analytic_costs(cfg, shape)
+            t = roofline_terms(c)
+            hc = corrected_hlo(results_dir, arch, shape, cfg.num_groups)
+            hlo_flops = (f"{hc['flops_per_device']:.3e}"
+                         if hc and hc["flops_per_device"] > 0 else "—")
+            lines.append(
+                f"| {arch} | {shape} | {t['compute_s']:.3e} | "
+                f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+                f"**{t['dominant']}** | {t['useful_ratio']:.2f} | "
+                f"{hlo_flops} | {status} |")
+    return "\n".join(lines)
+
+
+def run():
+    """CSV rows for benchmarks.run."""
+    from repro.launch.sweep import ARCHS
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            if shape_skipped(cfg, shape):
+                continue
+            t = roofline_terms(analytic_costs(cfg, shape))
+            rows.append(
+                f"roofline.{arch}.{shape},"
+                f"{max(t['compute_s'], t['memory_s'], t['collective_s']) * 1e6:.1f},"
+                f"dominant={t['dominant']};useful={t['useful_ratio']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    print(build_table())

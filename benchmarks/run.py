@@ -1,0 +1,44 @@
+"""Benchmark entry point: one function per paper table + roofline summary.
+
+``PYTHONPATH=src python -m benchmarks.run [--fast]``
+prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    reps = 4 if fast else 8
+    from . import (mode_selection, table1_speedup, table2_energy_proxy,
+                   table3_vs_klp_flp)
+    suites = [
+        ("table1_speedup", lambda: table1_speedup.run(reps=reps)),
+        ("table2_energy_proxy", lambda: table2_energy_proxy.run(reps=reps)),
+        ("table3_vs_klp_flp", lambda: table3_vs_klp_flp.run(reps=reps)),
+        ("mode_selection", lambda: mode_selection.run()),
+    ]
+    try:
+        from . import dryrun_summary, roofline
+        suites.append(("roofline", roofline.run))
+        suites.append(("dryrun_summary", dryrun_summary.run))
+    except ImportError:
+        pass
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in suites:
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception:  # keep going; report at the end
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

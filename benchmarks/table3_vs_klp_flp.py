@@ -1,0 +1,56 @@
+"""Table III analogue: Cappuccino (OLP) vs CNNDroid-style parallelization.
+
+CNNDroid [10] parallelizes with kernel/filter-level decomposition and
+explicit cross-thread reductions; the paper reports Cappuccino 1.38X faster
+exact and 11.47X faster imprecise, on AlexNet.  Our stand-ins: FLP and KLP
+implementations (materialized partial tensors + reduction — the cost OLP
+avoids) vs OLP, exact and imprecise, per representative conv layer and on
+the scaled AlexNet.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.cnn import alexnet, init_network_params
+from repro.core import ComputeMode, Parallelism, run_network
+
+from .common import bench, csv_row
+
+# representative conv layer geometries (scaled AlexNet conv2/conv3)
+LAYERS = [
+    ("conv2_like", (1, 24, 27, 27), (64, 24, 5, 5), 1),
+    ("conv3_like", (1, 64, 13, 13), (96, 64, 3, 3), 1),
+]
+
+
+def run(reps: int = 8):
+    rows = []
+    from repro.core.parallelism import conv2d
+    for lname, xshape, wshape, stride in LAYERS:
+        x = jax.random.normal(jax.random.PRNGKey(0), xshape)
+        w = jax.random.normal(jax.random.PRNGKey(1), wshape) * 0.1
+        for par in (Parallelism.OLP, Parallelism.FLP, Parallelism.KLP):
+            f = jax.jit(lambda xx, ww, par=par: conv2d(
+                xx, ww, stride=stride, padding="SAME", mode=ComputeMode.RELAXED,
+                parallelism=par))
+            t = bench(f, x, w, reps=reps)
+            rows.append(csv_row(f"table3.layer.{lname}.{par.value}", t * 1e6))
+
+    # whole-network: OLP vs FLP (the CNNDroid-style policy), exact + imprecise
+    net = alexnet(scale=0.25, num_classes=100, input_hw=115)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 3, 115, 115))
+    for par in (Parallelism.OLP, Parallelism.FLP):
+        for mode in (ComputeMode.PRECISE, ComputeMode.IMPRECISE):
+            modes = {n: mode for n in net.inexactable_layers}
+            f = jax.jit(lambda xx, par=par, modes=modes: run_network(
+                net, params, xx, modes=modes, parallelism=par))
+            t = bench(f, x, reps=reps)
+            rows.append(csv_row(f"table3.alexnet.{par.value}.{mode.value}",
+                                t * 1e6))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

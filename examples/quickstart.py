@@ -1,0 +1,41 @@
+"""Quickstart: the Cappuccino pipeline in 40 lines.
+
+Synthesizes an optimized inference program for SqueezeNet from the paper's
+three inputs — network description, model file, validation set — and runs
+it, printing the synthesis report (the analogue of the generated
+RenderScript source).
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).parent.parent / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.cnn import squeezenet, init_network_params
+from repro.core import ComputeMode, run_network, synthesize
+from repro.data import imagenet_like
+
+
+def main():
+    # Input 1: network description (scaled for CPU quickness)
+    net = squeezenet(scale=0.125, num_classes=10, input_hw=64)
+    # Input 2: model file (random weights here; a real deployment loads them)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    # Input 3: validation dataset
+    images, _ = imagenet_like(jax.random.PRNGKey(1), 32, hw=64)
+    labels = jnp.argmax(run_network(net, params, images), -1)
+
+    program = synthesize(net, params, validation=(images, labels),
+                         max_degradation=0.0)
+    print(program.report())
+
+    # Serve a batch with the synthesized program
+    batch, _ = imagenet_like(jax.random.PRNGKey(2), 8, hw=64)
+    probs = program.infer(batch)
+    print("\npredictions:", jnp.argmax(probs, -1).tolist())
+
+
+if __name__ == "__main__":
+    main()

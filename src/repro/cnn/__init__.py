@@ -1,0 +1,11 @@
+"""The paper's experimental workloads: AlexNet, SqueezeNet, GoogLeNet."""
+from .alexnet import alexnet
+from .squeezenet import squeezenet
+from .googlenet import googlenet
+from .params import init_network_params
+
+WORKLOADS = {"alexnet": alexnet, "squeezenet": squeezenet,
+             "googlenet": googlenet}
+
+__all__ = ["alexnet", "squeezenet", "googlenet", "init_network_params",
+           "WORKLOADS"]

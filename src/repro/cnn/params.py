@@ -1,0 +1,84 @@
+"""Parameter initialization ("model file" synthesis) for network DAGs.
+
+Performs a static shape-inference pass over the description to size conv and
+dense weights — this is the information the paper reads from the Caffe model
+file; we synthesize random He-initialized weights instead (no pretrained
+checkpoints ship with this container; tests compare implementations against
+each other, not against ImageNet accuracy).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.network import NetworkDescription
+
+
+def _pool_out(h: int, size: int, stride: int, padding: str) -> int:
+    if padding == "SAME":
+        return -(-h // stride)
+    return (h - size) // stride + 1
+
+
+def infer_shapes(net: NetworkDescription) -> Dict[str, Tuple[int, ...]]:
+    """Per-layer output shapes (excluding batch)."""
+    shapes: Dict[str, Tuple[int, ...]] = {"input": net.input_shape}
+    for l in net.layers:
+        ins = [shapes[i] for i in l.inputs]
+        s = ins[0]
+        if l.kind == "conv":
+            c, h, w = s
+            ho = _pool_out(h, l.kernel, l.stride, l.padding) if l.padding == "SAME" \
+                else (h - l.kernel) // l.stride + 1
+            wo = _pool_out(w, l.kernel, l.stride, l.padding) if l.padding == "SAME" \
+                else (w - l.kernel) // l.stride + 1
+            shapes[l.name] = (l.out_channels, ho, wo)
+        elif l.kind in ("relu", "lrn", "softmax"):
+            shapes[l.name] = s
+        elif l.kind in ("maxpool", "avgpool"):
+            c, h, w = s
+            shapes[l.name] = (c, _pool_out(h, l.pool_size, l.stride, l.padding),
+                              _pool_out(w, l.pool_size, l.stride, l.padding))
+        elif l.kind == "gap":
+            shapes[l.name] = (s[0],)
+        elif l.kind == "flatten":
+            shapes[l.name] = (int(math.prod(s)),)
+        elif l.kind == "dense":
+            shapes[l.name] = (l.out_channels,)
+        elif l.kind == "concat":
+            shapes[l.name] = (sum(i[0] for i in ins),) + s[1:]
+        else:
+            raise ValueError(l.kind)
+        if any(d <= 0 for d in shapes[l.name]):
+            raise ValueError(
+                f"{net.name}: layer {l.name} output shape {shapes[l.name]} "
+                f"degenerate — input_hw too small for this topology")
+    return shapes
+
+
+def init_network_params(net: NetworkDescription, key: jax.Array,
+                        dtype=jnp.float32) -> Dict[str, Dict[str, jnp.ndarray]]:
+    shapes = infer_shapes(net)
+    params: Dict[str, Dict[str, jnp.ndarray]] = {}
+    for l in net.layers:
+        if not l.has_params:
+            continue
+        key, k = jax.random.split(key)
+        in_shape = shapes[l.inputs[0]]
+        if l.kind == "conv":
+            cin = in_shape[0]
+            fan_in = cin * l.kernel * l.kernel
+            w = jax.random.normal(k, (l.out_channels, cin, l.kernel, l.kernel),
+                                  dtype) * math.sqrt(2.0 / fan_in)
+        else:  # dense
+            fan_in = int(math.prod(in_shape))
+            w = jax.random.normal(k, (fan_in, l.out_channels), dtype) \
+                * math.sqrt(2.0 / fan_in)
+        p = {"w": w}
+        if l.use_bias:
+            p["b"] = jnp.zeros((l.out_channels,), dtype)
+        params[l.name] = p
+    return params

@@ -1,0 +1,30 @@
+"""Cappuccino core: the paper's contributions as a composable JAX library.
+
+- layout:        map-major data reordering (§IV-B) + Eqs. (3)-(5)
+- precision:     inexact computing modes (§IV-C)
+- parallelism:   OLP / FLP / KLP workload allocation (§IV-A)
+- network:       network-description DAG (paper input #1)
+- mode_selector: per-layer inexact-mode analysis (§IV-C)
+- synthesizer:   the end-to-end synthesis pipeline (§III)
+"""
+from .layout import (LANES, from_map_major, mapmajor_scatter_order, num_groups,
+                     thread_to_whm, to_map_major, weights_to_map_major,
+                     whm_to_thread)
+from .mode_selector import ModeSelectionReport, select_modes
+from .network import Layer, NetworkDescription, run_network
+from .parallelism import Parallelism, conv2d, conv_flp, conv_klp, conv_olp
+from .precision import (MODES_FASTEST_FIRST, ComputeMode, QuantizedTensor,
+                        mode_dot, mode_tolerance, prepare_operand,
+                        prepare_weight, quantize_int8, resolve_weight)
+from .synthesizer import SynthesizedProgram, synthesize
+
+__all__ = [
+    "LANES", "from_map_major", "mapmajor_scatter_order", "num_groups",
+    "thread_to_whm", "to_map_major", "weights_to_map_major", "whm_to_thread",
+    "ModeSelectionReport", "select_modes",
+    "Layer", "NetworkDescription", "run_network",
+    "Parallelism", "conv2d", "conv_flp", "conv_klp", "conv_olp",
+    "MODES_FASTEST_FIRST", "ComputeMode", "QuantizedTensor", "mode_dot",
+    "mode_tolerance", "prepare_operand", "prepare_weight", "quantize_int8",
+    "resolve_weight", "SynthesizedProgram", "synthesize",
+]

@@ -1,0 +1,110 @@
+"""Map-major data layout (Cappuccino §IV-B, §IV-B-1).
+
+The paper stores feature maps and kernels *map major*: elements at the same
+spatial location of ``u`` consecutive feature maps are contiguous, so a
+u-way vector load fetches ``u`` MAC operands in one access (paper Eq. (2)).
+On TPU we take ``u = 128`` — the VPU lane width and MXU systolic dimension —
+so the channel group lands in the hardware's minor (lane) dimension.
+
+A map-major tensor of logical shape (C, H, W) is stored as
+``(ceil(C/u), H, W, u)`` with zero padding in the trailing lanes of the last
+group.  This module provides the static (compile-time) reorder used for
+weights, the inverse, and the thread-index maps of Eqs. (3)-(5) that make the
+*dynamic* output reorder zero-overhead (§IV-B-1): a thread with flat id ``x``
+writes its pixel directly at the map-major location, so the next layer needs
+no relayout pass.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# TPU lane width: the natural ``u`` for map-major grouping on this hardware.
+LANES = 128
+
+
+def num_groups(channels: int, u: int = LANES) -> int:
+    """Number of u-sized channel groups (the paper's 'stacks'), ceil(C/u)."""
+    if channels <= 0:
+        raise ValueError(f"channels must be positive, got {channels}")
+    return -(-channels // u)
+
+
+def to_map_major(x: jnp.ndarray, u: int = LANES, *, channel_axis: int = 1) -> jnp.ndarray:
+    """Reorder an (..., C, H, W) tensor to map-major (..., C/u, H, W, u).
+
+    Equivalent to the paper's Eq. (2) ordering with zero padding when C is
+    not a multiple of u.  Works for both activations (N, C, H, W) and any
+    tensor whose ``channel_axis`` should be vectorized.
+    """
+    c = x.shape[channel_axis]
+    g = num_groups(c, u)
+    pad = g * u - c
+    if pad:
+        pad_widths = [(0, 0)] * x.ndim
+        pad_widths[channel_axis] = (0, pad)
+        x = jnp.pad(x, pad_widths)
+    # split C -> (g, u), then move u to the minor-most position
+    new_shape = x.shape[:channel_axis] + (g, u) + x.shape[channel_axis + 1:]
+    x = x.reshape(new_shape)
+    # move the u axis (channel_axis+1) to the end
+    x = jnp.moveaxis(x, channel_axis + 1, -1)
+    return x
+
+
+def from_map_major(x: jnp.ndarray, channels: int, *, channel_axis: int = 1) -> jnp.ndarray:
+    """Inverse of :func:`to_map_major`; drops zero padding."""
+    u = x.shape[-1]
+    x = jnp.moveaxis(x, -1, channel_axis + 1)
+    merged = x.shape[:channel_axis] + (x.shape[channel_axis] * u,) + x.shape[channel_axis + 2:]
+    x = x.reshape(merged)
+    return jnp.take(x, jnp.arange(channels), axis=channel_axis)
+
+
+def weights_to_map_major(w: jnp.ndarray, u: int = LANES) -> jnp.ndarray:
+    """Static compile-time weight reorder (paper §IV-B: 'model data').
+
+    OIHW kernels (M, N, Kh, Kw) -> (M, N/u, Kh, Kw, u): the input-channel
+    dim is grouped so the kernel operand of the vectorized MAC (Fig. 6) is a
+    contiguous u-vector.  Happens once at synthesis time — zero runtime cost,
+    model size unchanged (modulo padding), exactly as the paper notes.
+    """
+    return to_map_major(w, u, channel_axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Eqs. (3)-(5): zero-overhead dynamic reorder index maps.
+#
+# Thread x in [0, alpha), alpha = M*Wout*Hout, computes output element
+# (m, h, w) and writes it directly at map-major position x.  The flat
+# map-major order enumerated by x is exactly row-major over
+# (stack = M/u, h, w, lane = u).
+# ---------------------------------------------------------------------------
+
+def thread_to_whm(x, u: int, w_out: int, h_out: int):
+    """Paper Eqs. (3), (4), (5): flat thread id -> (w, h, m).
+
+    Accepts scalars or arrays (numpy or jax); pure integer arithmetic so it
+    can run inside a kernel to compute write offsets.
+    """
+    w = (x // u) % w_out                      # Eq. (3)
+    h = (x // (u * w_out)) % h_out            # Eq. (4)
+    m = (x % u) + (x // (u * w_out * h_out)) * u   # Eq. (5)
+    return w, h, m
+
+
+def whm_to_thread(w, h, m, u: int, w_out: int, h_out: int):
+    """Inverse of Eqs. (3)-(5): (w, h, m) -> flat map-major thread id."""
+    stack, lane = m // u, m % u
+    return lane + w * u + h * (u * w_out) + stack * (u * w_out * h_out)
+
+
+def mapmajor_scatter_order(m_total: int, h_out: int, w_out: int, u: int) -> np.ndarray:
+    """Permutation p with p[x] = row-major offset of thread x's (m,h,w) pixel.
+
+    Used by tests to prove that writing outputs at thread order == storing
+    the (C/u, H, W, u) array row-major == the paper's Fig. 7 layout.
+    """
+    x = np.arange(m_total * h_out * w_out, dtype=np.int64)
+    w, h, m = thread_to_whm(x, u, w_out, h_out)
+    return (m * h_out + h) * w_out + w

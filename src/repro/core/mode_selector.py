@@ -1,0 +1,109 @@
+"""Per-layer inexact-computing mode selection (Cappuccino §IV-C).
+
+Cappuccino "analyzes the given CNN layer by layer to determine the best
+matching computing mode for every layer", using the validation dataset, so
+that "as many CNN layers as possible [run] in inexact modes, under user
+specified constraints in terms of acceptable degradation in classification
+accuracy".
+
+Algorithm (greedy, fastest-mode-first — matches the paper's goal function):
+
+  1. Measure reference metric (top-1 accuracy, or -loss for LM heads) with
+     every layer PRECISE.
+  2. Tentatively set *all* tunable layers to the fastest allowed mode and
+     measure.  If within the constraint, done (this is the paper's observed
+     outcome: "classification accuracy in imprecise mode turns out to be
+     identical to the exact mode ... Cappuccino recommends imprecise in all
+     layers").
+  3. Otherwise, refine per layer: sweep layers in order of their measured
+     individual sensitivity (most sensitive first), backing each off to the
+     next-slower mode until the constraint holds.
+
+The evaluation function is injected, so the same selector serves CNN top-1
+accuracy and transformer validation loss.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .precision import ComputeMode, MODES_FASTEST_FIRST
+
+# evaluate(modes: dict[layer, ComputeMode]) -> float metric (higher better)
+EvalFn = Callable[[Dict[str, ComputeMode]], float]
+
+
+@dataclass
+class ModeSelectionReport:
+    reference_metric: float
+    final_metric: float
+    modes: Dict[str, ComputeMode]
+    evaluations: int
+    trace: List[str] = field(default_factory=list)
+
+    @property
+    def degradation(self) -> float:
+        return self.reference_metric - self.final_metric
+
+    def summary(self) -> str:
+        lines = [f"reference metric : {self.reference_metric:.4f}",
+                 f"final metric     : {self.final_metric:.4f}",
+                 f"degradation      : {self.degradation:.4f}",
+                 f"evaluations      : {self.evaluations}"]
+        for name, mode in self.modes.items():
+            lines.append(f"  {name:28s} -> {mode.value}")
+        return "\n".join(lines)
+
+
+def select_modes(layer_names: Sequence[str], evaluate: EvalFn, *,
+                 max_degradation: float = 0.0,
+                 allow_int8: bool = False) -> ModeSelectionReport:
+    """Greedy per-layer mode assignment under an accuracy-drop constraint."""
+    candidate_modes = [m for m in MODES_FASTEST_FIRST
+                       if allow_int8 or m is not ComputeMode.IMPRECISE_INT8]
+    fastest = candidate_modes[0]
+    evals = 0
+    trace: List[str] = []
+
+    def run(modes: Dict[str, ComputeMode]) -> float:
+        nonlocal evals
+        evals += 1
+        return float(evaluate(modes))
+
+    precise = {n: ComputeMode.PRECISE for n in layer_names}
+    ref = run(precise)
+    trace.append(f"reference (all precise): {ref:.4f}")
+
+    # Step 2: all-fastest shortcut.
+    modes = {n: fastest for n in layer_names}
+    metric = run(modes)
+    trace.append(f"all-{fastest.value}: {metric:.4f}")
+    if ref - metric <= max_degradation:
+        return ModeSelectionReport(ref, metric, modes, evals, trace)
+
+    # Step 3: per-layer sensitivity = metric drop when only that layer is
+    # inexact (paper: "in every layer, it utilizes the validation dataset to
+    # measure the classification accuracy under different processing modes").
+    sensitivity: List[Tuple[float, str]] = []
+    for name in layer_names:
+        probe = dict(precise)
+        probe[name] = fastest
+        m = run(probe)
+        sensitivity.append((ref - m, name))
+        trace.append(f"sensitivity[{name}] = {ref - m:.4f}")
+    sensitivity.sort(reverse=True)  # most sensitive first
+
+    modes = {n: fastest for n in layer_names}
+    for drop, name in sensitivity:
+        metric = run(modes)
+        if ref - metric <= max_degradation:
+            break
+        # back this layer off through slower modes until it stops mattering
+        for slower in candidate_modes[1:]:
+            modes[name] = slower
+            metric = run(modes)
+            trace.append(f"back off {name} -> {slower.value}: {metric:.4f}")
+            if ref - metric <= max_degradation:
+                break
+    final = run(modes)
+    return ModeSelectionReport(ref, final, modes, evals, trace)

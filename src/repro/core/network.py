@@ -1,0 +1,222 @@
+"""Network description: Cappuccino input #1 (§III).
+
+A typed, framework-neutral DAG of layers — the analogue of the paper's
+"network description file" (Caffe prototxt).  ``NetworkDescription`` is
+consumed by the synthesizer, which pairs it with a model file (input #2,
+a params dict) and a validation set (input #3).
+
+Only what the paper's workloads need: conv / relu / pool / lrn / dense /
+concat (inception & fire modules are concats) / softmax.  Branching is a
+first-class feature because GoogLeNet and SqueezeNet are DAGs, not chains.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .precision import ComputeMode
+from .parallelism import Parallelism, conv2d
+
+
+@dataclass(frozen=True)
+class Layer:
+    name: str
+    kind: str                      # conv, relu, maxpool, avgpool, gap, lrn,
+                                   # dense, flatten, concat, softmax, input
+    inputs: Tuple[str, ...] = ()
+    # conv/dense attrs
+    out_channels: int = 0
+    kernel: int = 0
+    stride: int = 1
+    padding: str = "VALID"
+    use_bias: bool = True
+    # pool attrs
+    pool_size: int = 0
+    # lrn attrs
+    lrn_size: int = 5
+    lrn_alpha: float = 1e-4
+    lrn_beta: float = 0.75
+
+    @property
+    def has_params(self) -> bool:
+        return self.kind in ("conv", "dense")
+
+    @property
+    def is_inexactable(self) -> bool:
+        """Layers whose arithmetic mode the selector tunes (conv/dense are
+        where >99% of inference time goes — paper §II)."""
+        return self.kind in ("conv", "dense")
+
+
+@dataclass
+class NetworkDescription:
+    name: str
+    input_shape: Tuple[int, ...]            # (C, H, W) — batch excluded
+    layers: List[Layer] = field(default_factory=list)
+
+    def __post_init__(self):
+        names = [l.name for l in self.layers]
+        if len(names) != len(set(names)):
+            raise ValueError(f"duplicate layer names in {self.name}")
+
+    # -- builder helpers -----------------------------------------------
+    def _tail(self) -> str:
+        return self.layers[-1].name if self.layers else "input"
+
+    def add(self, layer: Layer) -> str:
+        self.layers.append(layer)
+        return layer.name
+
+    def conv(self, name, out_channels, kernel, stride=1, padding="SAME",
+             inputs=None, use_bias=True):
+        return self.add(Layer(name, "conv", tuple(inputs or (self._tail(),)),
+                              out_channels=out_channels, kernel=kernel,
+                              stride=stride, padding=padding, use_bias=use_bias))
+
+    def relu(self, name, inputs=None):
+        return self.add(Layer(name, "relu", tuple(inputs or (self._tail(),))))
+
+    def maxpool(self, name, pool_size, stride, padding="VALID", inputs=None):
+        return self.add(Layer(name, "maxpool", tuple(inputs or (self._tail(),)),
+                              pool_size=pool_size, stride=stride, padding=padding))
+
+    def avgpool(self, name, pool_size, stride, padding="VALID", inputs=None):
+        return self.add(Layer(name, "avgpool", tuple(inputs or (self._tail(),)),
+                              pool_size=pool_size, stride=stride, padding=padding))
+
+    def gap(self, name, inputs=None):
+        return self.add(Layer(name, "gap", tuple(inputs or (self._tail(),))))
+
+    def lrn(self, name, size=5, alpha=1e-4, beta=0.75, inputs=None):
+        return self.add(Layer(name, "lrn", tuple(inputs or (self._tail(),)),
+                              lrn_size=size, lrn_alpha=alpha, lrn_beta=beta))
+
+    def dense(self, name, out_channels, inputs=None, use_bias=True):
+        return self.add(Layer(name, "dense", tuple(inputs or (self._tail(),)),
+                              out_channels=out_channels, use_bias=use_bias))
+
+    def flatten(self, name, inputs=None):
+        return self.add(Layer(name, "flatten", tuple(inputs or (self._tail(),))))
+
+    def concat(self, name, inputs):
+        return self.add(Layer(name, "concat", tuple(inputs)))
+
+    def softmax(self, name, inputs=None):
+        return self.add(Layer(name, "softmax", tuple(inputs or (self._tail(),))))
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def param_layers(self) -> List[Layer]:
+        return [l for l in self.layers if l.has_params]
+
+    @property
+    def inexactable_layers(self) -> List[str]:
+        return [l.name for l in self.layers if l.is_inexactable]
+
+
+# ---------------------------------------------------------------------------
+# Reference (non-synthesized) executor.  The synthesizer produces an
+# optimized program; this executor defines the semantics both share.
+# ---------------------------------------------------------------------------
+
+def _maxpool(x, size, stride, padding):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 1, size, size),
+                             (1, 1, stride, stride), padding)
+
+
+def _avgpool(x, size, stride, padding):
+    s = lax.reduce_window(x, 0.0, lax.add, (1, 1, size, size),
+                          (1, 1, stride, stride), padding)
+    ones = jnp.ones_like(x)
+    n = lax.reduce_window(ones, 0.0, lax.add, (1, 1, size, size),
+                          (1, 1, stride, stride), padding)
+    return s / n
+
+
+def _lrn(x, size, alpha, beta):
+    sq = jnp.square(x)
+    half = size // 2
+    pad = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
+    window = sum(pad[:, i:i + x.shape[1]] for i in range(size))
+    return x / jnp.power(1.0 + (alpha / size) * window, beta)
+
+
+def run_network(net: NetworkDescription, params: Dict[str, Dict[str, jnp.ndarray]],
+                x: jnp.ndarray, *,
+                modes: Optional[Dict[str, ComputeMode]] = None,
+                parallelism: Parallelism = Parallelism.OLP,
+                backend: str = "xla", mapmajor_u: int = 128) -> jnp.ndarray:
+    """Evaluate the DAG.  ``modes`` maps layer name -> ComputeMode (default
+    PRECISE); conv/dense honor it, structural layers run in f32.
+
+    backend="xla" uses lax convs (OLP semantics, XLA codegen); "pallas" uses
+    the map-major Pallas kernels (interpret mode on CPU) — the synthesized
+    TPU program.  Both share these semantics.
+    """
+    modes = modes or {}
+    acts: Dict[str, jnp.ndarray] = {"input": x}
+    for layer in net.layers:
+        ins = [acts[i] for i in layer.inputs]
+        a = ins[0] if ins else None
+        mode = modes.get(layer.name, ComputeMode.PRECISE)
+        if layer.kind == "conv":
+            p = params[layer.name]
+            if backend == "sequential":
+                from .parallelism import conv_sequential
+                y = conv_sequential(a, p["w"], stride=layer.stride,
+                                    padding=layer.padding)
+                if layer.use_bias:
+                    y = y + p["b"][None, :, None, None].astype(y.dtype)
+            elif backend == "pallas" and parallelism is Parallelism.OLP:
+                from ..kernels.conv_mapmajor.ops import conv2d_mapmajor
+                from .precision import resolve_weight
+                y = conv2d_mapmajor(a, resolve_weight(p["w"], mode), p.get("b"),
+                                    stride=layer.stride,
+                                    padding=layer.padding, mode=mode,
+                                    u=mapmajor_u)
+            else:
+                y = conv2d(a, p["w"], stride=layer.stride, padding=layer.padding,
+                           mode=mode, parallelism=parallelism)
+                if layer.use_bias:
+                    y = y + p["b"][None, :, None, None].astype(y.dtype)
+        elif layer.kind == "relu":
+            y = jnp.maximum(a, 0)
+        elif layer.kind == "maxpool":
+            y = _maxpool(a, layer.pool_size, layer.stride, layer.padding)
+        elif layer.kind == "avgpool":
+            y = _avgpool(a, layer.pool_size, layer.stride, layer.padding)
+        elif layer.kind == "gap":
+            y = jnp.mean(a, axis=(2, 3))
+        elif layer.kind == "lrn":
+            y = _lrn(a.astype(jnp.float32), layer.lrn_size, layer.lrn_alpha,
+                     layer.lrn_beta).astype(a.dtype)
+        elif layer.kind == "dense":
+            p = params[layer.name]
+            if backend == "sequential":
+                a2 = a.reshape(a.shape[0], -1).astype(jnp.float32)
+                wseq = p["w"].astype(jnp.float32)
+                _, cols = lax.scan(lambda _, wc: (None, a2 @ wc[:, None]),
+                                   None, jnp.moveaxis(wseq, 1, 0))
+                y = jnp.moveaxis(cols[..., 0], 0, 1)
+            elif backend == "pallas":
+                from ..kernels.matmul_mapmajor.ops import matmul
+                y = matmul(a.reshape(a.shape[0], -1), p["w"], mode=mode)
+            else:
+                from .precision import mode_dot
+                y = mode_dot(a.reshape(a.shape[0], -1), p["w"], mode)
+            if layer.use_bias:
+                y = y + p["b"].astype(y.dtype)
+        elif layer.kind == "flatten":
+            y = a.reshape(a.shape[0], -1)
+        elif layer.kind == "concat":
+            y = jnp.concatenate([i.astype(ins[0].dtype) for i in ins], axis=1)
+        elif layer.kind == "softmax":
+            y = jax.nn.softmax(a.astype(jnp.float32), axis=-1)
+        else:
+            raise ValueError(f"unknown layer kind {layer.kind}")
+        acts[layer.name] = y
+    return acts[net.layers[-1].name]

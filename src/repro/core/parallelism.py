@@ -1,0 +1,174 @@
+"""Thread workload-allocation policies (Cappuccino §IV-A).
+
+Three sources of parallelism in a convolutional layer:
+
+  KLP  kernel-level:     one thread per scalar multiplication; a reduction
+                         over N*K*K products yields each output pixel.
+  FLP  filter-bank-level: one thread per (kernel x output pixel) 2-D
+                         convolution; a reduction over the N input maps
+                         yields each output pixel.
+  OLP  output-level:     one thread per output pixel; the full 3-D reduction
+                         happens *inside* the thread — no cross-thread
+                         reduction, maximal kernel reuse.
+
+The paper selects OLP at the thread level and exploits KLP/FLP *within*
+each thread via vector instructions.  We reproduce all three so the
+CNNDroid-style comparison (Table III) has a real KLP/FLP baseline: the
+KLP/FLP implementations below materialize their cross-thread partial-product
+tensors exactly as a reduction across threads would, which is what makes
+them slower and more memory hungry — the paper's stated reason for OLP.
+
+On TPU, a "thread" is a Pallas grid cell (owning an output tile rather than
+a scalar), and the intra-thread vector unit is the MXU; see DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import enum
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .precision import ComputeMode, prepare_operand, resolve_weight
+
+
+class Parallelism(enum.Enum):
+    OLP = "olp"
+    FLP = "flp"
+    KLP = "klp"
+
+
+def _dims(x, w, stride, padding):
+    n, c, h_in, w_in = x.shape
+    m, c2, kh, kw = w.shape
+    assert c == c2, f"channel mismatch {c} vs {c2}"
+    return n, c, h_in, w_in, m, kh, kw
+
+
+def conv_olp(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+             padding: str = "VALID", mode: ComputeMode = ComputeMode.PRECISE) -> jnp.ndarray:
+    """OLP: each output pixel's 3-D reduction is thread-local.
+
+    Maps to a single fused conv op: XLA's conv keeps the (Cin, Kh, Kw)
+    reduction inside each output tile's computation — no materialized
+    partials, direct analogue of the paper's one-thread-per-pixel policy.
+    """
+    xa = prepare_operand(x, mode)
+    wa = resolve_weight(w, mode)
+    out = lax.conv_general_dilated(
+        xa, wa, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        precision=mode.lax_precision,
+        preferred_element_type=mode.accum_dtype)
+    return out.astype(mode.out_dtype)
+
+
+def conv_flp(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+             padding: str = "VALID", mode: ComputeMode = ComputeMode.PRECISE) -> jnp.ndarray:
+    """FLP: one thread per kernel — partials over Cin are materialized, then
+    reduced.  The (N, M, Cin, Hout, Wout) partial tensor is the inter-thread
+    traffic the paper charges against FLP."""
+    xa = prepare_operand(x, mode)
+    wa = resolve_weight(w, mode)
+    out = _flp_general(xa, wa, stride, padding, mode)
+    return out.astype(mode.out_dtype)
+
+
+def _flp_general(xa, wa, stride, padding, mode):
+    """Batched FLP partials: vmap a single-channel conv over Cin, then reduce."""
+    def one_channel(xc, wc):
+        # xc: (N,1,H,W); wc: (M,1,Kh,Kw)
+        return lax.conv_general_dilated(
+            xc, wc, window_strides=(stride, stride), padding=padding,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            precision=mode.lax_precision,
+            preferred_element_type=mode.accum_dtype)
+    xs = jnp.moveaxis(xa[:, :, None], 1, 0)             # (Cin, N, 1, H, W)
+    ws = jnp.moveaxis(wa[:, :, None], 1, 0)             # (Cin, M, 1, Kh, Kw)
+    part = jax.vmap(one_channel)(xs, ws)                # (Cin, N, M, Ho, Wo) materialized
+    return jnp.sum(part, axis=0)
+
+
+def conv_klp(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+             padding: str = "VALID", mode: ComputeMode = ComputeMode.PRECISE) -> jnp.ndarray:
+    """KLP: one thread per multiplication — every product is materialized
+    (im2col times broadcast weights), then a full reduction runs across the
+    Cin*Kh*Kw axis.  Maximal inter-thread traffic, the paper's worst case."""
+    xa = prepare_operand(x, mode)
+    wa = resolve_weight(w, mode)
+    n, c, h_in, w_in = xa.shape
+    m, _, kh, kw = wa.shape
+    if padding == "SAME":
+        ph, pw = (kh - 1) // 2, (kw - 1) // 2
+        xa = jnp.pad(xa, ((0, 0), (0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw)))
+        h_in, w_in = xa.shape[2], xa.shape[3]
+    h_out = (h_in - kh) // stride + 1
+    w_out = (w_in - kw) // stride + 1
+    # im2col: (N, C*Kh*Kw, Ho*Wo)
+    patches = lax.conv_general_dilated_patches(
+        xa, (kh, kw), (stride, stride), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    patches = patches.reshape(n, c * kh * kw, h_out * w_out)
+    wf = wa.reshape(m, c * kh * kw)
+    # every scalar product, materialized: (N, M, C*Kh*Kw, Ho*Wo)
+    products = (patches[:, None, :, :].astype(mode.accum_dtype)
+                * wf[None, :, :, None].astype(mode.accum_dtype))
+    out = jnp.sum(products, axis=2)                     # the KLP mega-reduction
+    return out.reshape(n, m, h_out, w_out).astype(mode.out_dtype)
+
+
+def conv_sequential(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
+                    padding: str = "VALID",
+                    mode: ComputeMode = ComputeMode.PRECISE) -> jnp.ndarray:
+    """The paper's baseline: a single-threaded scalar loop nest (Fig. 2).
+
+    Sequential lax.scan over output channels and input channels; the inner
+    body applies one K x K kernel as scalar-weight * shifted-plane adds.
+    This is the closest JAX analogue of the naive six-loop Java program the
+    paper's Table I baselines against: no thread parallelism, no vector MAC
+    over channels.
+    """
+    xa = x.astype(jnp.float32)
+    wa = resolve_weight(w, ComputeMode.PRECISE).astype(jnp.float32)
+    n, c, h_in, w_in = xa.shape
+    m, _, kh, kw = wa.shape
+    if padding == "SAME":
+        out_h, out_w = -(-h_in // stride), -(-w_in // stride)
+        need_h, need_w = (out_h - 1) * stride + kh, (out_w - 1) * stride + kw
+        ph, pw = max(need_h - h_in, 0), max(need_w - w_in, 0)
+        xa = jnp.pad(xa, ((0, 0), (0, 0), (ph // 2, ph - ph // 2),
+                          (pw // 2, pw - pw // 2)))
+        h_in, w_in = xa.shape[2], xa.shape[3]
+    h_out = (h_in - kh) // stride + 1
+    w_out = (w_in - kw) // stride + 1
+
+    def one_filter(_, wm):                       # wm: (C, Kh, Kw)
+        def one_channel(acc, args):
+            xc, wc = args                        # (N, H, W), (Kh, Kw)
+            plane = jnp.zeros((n, h_out, w_out), jnp.float32)
+            for dh in range(kh):                 # K*K scalar MACs, unrolled
+                for dw in range(kw):
+                    win = lax.slice(xc, (0, dh, dw),
+                                    (n, dh + (h_out - 1) * stride + 1,
+                                     dw + (w_out - 1) * stride + 1),
+                                    (1, stride, stride))
+                    plane = plane + win * wc[dh, dw]
+            return acc + plane, None
+        acc0 = jnp.zeros((n, h_out, w_out), jnp.float32)
+        out_m, _ = lax.scan(one_channel, acc0,
+                            (jnp.moveaxis(xa, 1, 0), wm))
+        return None, out_m
+
+    _, planes = lax.scan(one_filter, None, wa)   # sequential over M filters
+    return jnp.moveaxis(planes, 0, 1)            # (N, M, Ho, Wo)
+
+
+CONV_IMPLS = {Parallelism.OLP: conv_olp, Parallelism.FLP: conv_flp,
+              Parallelism.KLP: conv_klp}
+
+
+def conv2d(x, w, *, stride=1, padding="VALID", mode=ComputeMode.PRECISE,
+           parallelism: Parallelism = Parallelism.OLP):
+    """Convolution under a chosen workload-allocation policy and mode."""
+    return CONV_IMPLS[parallelism](x, w, stride=stride, padding=padding, mode=mode)

@@ -1,0 +1,152 @@
+"""Inexact computing modes (Cappuccino §IV-C), adapted to TPU arithmetic.
+
+RenderScript exposes *precise*, *relaxed*, and *imprecise* floating-point
+modes; vector processing is only available under the inexact modes.  The TPU
+analogue is exact in spirit: full-rate MXU throughput requires bf16 operands
+(f32 matmuls run at a fraction of peak), so "vectorization only when
+imprecise" maps to "systolic-array peak only when bf16".
+
+Modes (fastest last):
+  PRECISE        f32 storage, f32 math, HIGHEST XLA precision.
+  RELAXED        bf16 operands, f32 accumulation (MXU native mode).
+  IMPRECISE      bf16 operands *and* bf16 accumulation / outputs.
+  IMPRECISE_INT8 int8 per-output-channel weight quantization, bf16 activations
+                 (beyond-paper extension; recorded separately in experiments).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class ComputeMode(enum.Enum):
+    PRECISE = "precise"
+    RELAXED = "relaxed"
+    IMPRECISE = "imprecise"
+    IMPRECISE_INT8 = "imprecise_int8"
+
+    @property
+    def operand_dtype(self):
+        return jnp.float32 if self is ComputeMode.PRECISE else jnp.bfloat16
+
+    @property
+    def accum_dtype(self):
+        return (jnp.bfloat16 if self is ComputeMode.IMPRECISE else jnp.float32)
+
+    @property
+    def out_dtype(self):
+        return jnp.float32 if self is ComputeMode.PRECISE else jnp.bfloat16
+
+    @property
+    def lax_precision(self):
+        return (lax.Precision.HIGHEST if self is ComputeMode.PRECISE
+                else lax.Precision.DEFAULT)
+
+    @property
+    def quantizes_weights(self) -> bool:
+        return self is ComputeMode.IMPRECISE_INT8
+
+    # Relative speed rank used by the greedy mode selector (fastest first).
+    @property
+    def speed_rank(self) -> int:
+        return {ComputeMode.IMPRECISE_INT8: 0, ComputeMode.IMPRECISE: 1,
+                ComputeMode.RELAXED: 2, ComputeMode.PRECISE: 3}[self]
+
+
+#: Modes the selector tries, fastest first (paper: "as many layers as
+#: possible in inexact modes").  INT8 is opt-in via allow_int8.
+MODES_FASTEST_FIRST = (ComputeMode.IMPRECISE_INT8, ComputeMode.IMPRECISE,
+                       ComputeMode.RELAXED, ComputeMode.PRECISE)
+
+
+@dataclass(frozen=True)
+class QuantizedTensor:
+    """Per-output-channel symmetric int8 quantization of a weight tensor.
+
+    Registered as a pytree so quantized parameter trees flow through jit /
+    pjit / checkpointing like ordinary params (IMPRECISE_INT8 serving)."""
+    q: jnp.ndarray        # int8 payload, same shape as the original
+    scale: jnp.ndarray    # f32, broadcastable: shape (out_ch, 1, 1, ..., 1)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    def dequantize(self, dtype=jnp.bfloat16) -> jnp.ndarray:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def reshape(self, *shape):
+        """Dequantize-on-reshape: weight consumers reshape fused projection
+        dims; a reshape breaks per-channel scale alignment, so materialize."""
+        return self.dequantize().reshape(*shape)
+
+    def astype(self, dtype):
+        return self.dequantize(dtype)
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedTensor,
+    lambda t: ((t.q, t.scale), None),
+    lambda _, children: QuantizedTensor(q=children[0], scale=children[1]))
+
+
+def quantize_int8(w: jnp.ndarray, *, channel_axis: int = 0) -> QuantizedTensor:
+    reduce_axes = tuple(a for a in range(w.ndim) if a != channel_axis)
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=reduce_axes, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale)
+
+
+def prepare_operand(x: jnp.ndarray, mode: ComputeMode) -> jnp.ndarray:
+    """Cast an activation/weight operand for the given mode."""
+    return x.astype(mode.operand_dtype)
+
+
+def prepare_weight(w: jnp.ndarray, mode: ComputeMode, *, channel_axis: int = 0) -> Any:
+    """Synthesis-time weight preparation: cast, or quantize for INT8 mode."""
+    if mode.quantizes_weights:
+        return quantize_int8(w, channel_axis=channel_axis)
+    return w.astype(mode.operand_dtype)
+
+
+def resolve_weight(w: Any, mode: ComputeMode) -> jnp.ndarray:
+    """Turn a prepared weight (possibly QuantizedTensor) into a math operand."""
+    if isinstance(w, QuantizedTensor):
+        return w.dequantize(mode.operand_dtype)
+    return w.astype(mode.operand_dtype)
+
+
+def mode_dot(a: jnp.ndarray, b: jnp.ndarray, mode: ComputeMode,
+             dimension_numbers=None) -> jnp.ndarray:
+    """A dot/matmul executed under a compute mode.
+
+    PRECISE keeps f32 at HIGHEST precision; RELAXED does bf16xbf16->f32
+    (preferred_element_type=f32, the MXU-native mode); IMPRECISE accumulates
+    in bf16.  Returns mode.out_dtype.
+    """
+    a = prepare_operand(a, mode)
+    b = resolve_weight(b, mode) if isinstance(b, QuantizedTensor) else prepare_operand(b, mode)
+    if dimension_numbers is None:
+        out = jnp.matmul(a, b, precision=mode.lax_precision,
+                         preferred_element_type=mode.accum_dtype)
+    else:
+        out = lax.dot_general(a, b, dimension_numbers,
+                              precision=mode.lax_precision,
+                              preferred_element_type=mode.accum_dtype)
+    return out.astype(mode.out_dtype)
+
+
+def mode_tolerance(mode: ComputeMode) -> float:
+    """assert_allclose rtol appropriate for a mode (used by kernel tests)."""
+    return {ComputeMode.PRECISE: 1e-6, ComputeMode.RELAXED: 2e-2,
+            ComputeMode.IMPRECISE: 5e-2, ComputeMode.IMPRECISE_INT8: 1.5e-1}[mode]

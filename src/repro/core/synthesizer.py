@@ -1,0 +1,125 @@
+"""The Cappuccino synthesis pipeline (paper §III, Fig. 3).
+
+Inputs (exactly the paper's three):
+  1. a :class:`NetworkDescription`          (architecture),
+  2. a model file — params dict              (weights/biases),
+  3. a validation dataset                    (images, labels).
+
+Stages:
+  A. *Primary program synthesis*: build the OLP-parallel program.
+  B. *Parameter reordering* (compile-time, §IV-B): weights go map-major so
+     the vectorized kernels load u operands per access.  Model size is
+     unchanged (modulo lane padding), as the paper notes.
+  C. *Inexact-computing analysis* (§IV-C): run the mode selector on the
+     validation set under the user's accuracy constraint.
+  D. *Software synthesis*: emit the final program — here an XLA-compiled,
+     jitted callable with the per-layer mode policy baked in, plus a
+     human-readable synthesis report (the analogue of the generated
+     RenderScript source).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layout import LANES, weights_to_map_major
+from .mode_selector import ModeSelectionReport, select_modes
+from .network import NetworkDescription, run_network
+from .parallelism import Parallelism
+from .precision import ComputeMode, prepare_weight
+
+
+@dataclass
+class SynthesizedProgram:
+    """The synthesis artifact: a compiled inference program + metadata."""
+    net: NetworkDescription
+    infer: Callable[[jnp.ndarray], jnp.ndarray]   # jitted, modes baked in
+    modes: Dict[str, ComputeMode]
+    parallelism: Parallelism
+    mode_report: Optional[ModeSelectionReport]
+    synthesis_seconds: float
+    vector_width: int = LANES
+
+    def report(self) -> str:
+        lines = [f"== Cappuccino synthesis report: {self.net.name} ==",
+                 f"parallelism      : {self.parallelism.value} (thread level)"
+                 f" + vectorized MAC (intra-thread, u={self.vector_width})",
+                 f"layers           : {len(self.net.layers)}"
+                 f" ({len(self.net.param_layers)} parametric)",
+                 f"synthesis time   : {self.synthesis_seconds:.2f}s",
+                 "layer modes:"]
+        for l in self.net.layers:
+            if l.is_inexactable:
+                lines.append(f"  {l.name:28s} {self.modes[l.name].value}")
+        if self.mode_report is not None:
+            lines.append("mode selection:")
+            lines.append("  " + self.mode_report.summary().replace("\n", "\n  "))
+        return "\n".join(lines)
+
+
+def _accuracy_eval(net, params, images, labels, parallelism):
+    """Top-1 classification accuracy evaluator for the mode selector."""
+    def evaluate(modes: Dict[str, ComputeMode]) -> float:
+        logits = run_network(net, params, images, modes=modes,
+                             parallelism=parallelism)
+        pred = jnp.argmax(logits, axis=-1)
+        return float(jnp.mean((pred == labels).astype(jnp.float32)))
+    return evaluate
+
+
+def synthesize(net: NetworkDescription,
+               params: Dict[str, Dict[str, jnp.ndarray]],
+               validation: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+               *,
+               max_degradation: float = 0.0,
+               allow_int8: bool = False,
+               parallelism: Parallelism = Parallelism.OLP,
+               backend: str = "xla",
+               forced_mode: Optional[ComputeMode] = None) -> SynthesizedProgram:
+    """Run the full Cappuccino pipeline and return the synthesized program.
+
+    ``forced_mode`` skips stage C and pins every tunable layer to one mode —
+    used to reproduce the paper's 'Parallel' (RELAXED/PRECISE) and
+    'Imprecise' table columns directly.
+    """
+    t0 = time.time()
+
+    # Stage C: inexact-computing analysis (or forced mode).
+    mode_report = None
+    if forced_mode is not None:
+        modes = {n: forced_mode for n in net.inexactable_layers}
+    elif validation is not None:
+        images, labels = validation
+        evaluate = _accuracy_eval(net, params, images, labels, parallelism)
+        mode_report = select_modes(net.inexactable_layers, evaluate,
+                                   max_degradation=max_degradation,
+                                   allow_int8=allow_int8)
+        modes = mode_report.modes
+    else:
+        modes = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
+
+    # Stage B: compile-time parameter preparation per chosen mode
+    # (cast / int8-quantize; map-major reorder happens inside the Pallas
+    # kernels' operand spec — weights_to_map_major is exposed for them).
+    prepared = {}
+    for l in net.param_layers:
+        p = dict(params[l.name])
+        mode = modes[l.name]
+        p["w"] = prepare_weight(p["w"], mode, channel_axis=0)
+        if "b" in p:
+            p["b"] = p["b"].astype(jnp.float32)
+        prepared[l.name] = p
+
+    # Stage D: emit the compiled program with modes baked in.
+    def _infer(x):
+        return run_network(net, prepared, x, modes=modes,
+                           parallelism=parallelism, backend=backend)
+    infer = jax.jit(_infer)
+
+    return SynthesizedProgram(net=net, infer=infer, modes=modes,
+                              parallelism=parallelism, mode_report=mode_report,
+                              synthesis_seconds=time.time() - t0)

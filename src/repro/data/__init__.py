@@ -1,0 +1,4 @@
+from .synthetic import imagenet_like, lm_batches, token_stream
+from .pipeline import DataPipeline
+
+__all__ = ["imagenet_like", "lm_batches", "token_stream", "DataPipeline"]

@@ -1,0 +1,47 @@
+"""Host-side data pipeline: prefetch + shard placement.
+
+A deliberately small but real pipeline: background-thread prefetch of
+numpy batches, conversion to device arrays with a target sharding (so the
+train loop overlaps host data prep with device compute — the standard
+JAX input-pipeline pattern).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class DataPipeline:
+    def __init__(self, it: Iterator, *, prefetch: int = 2,
+                 sharding: Optional[jax.sharding.Sharding] = None):
+        self._it = it
+        self._sharding = sharding
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._done = object()
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        if self._sharding is not None:
+            item = jax.tree.map(
+                lambda a: jax.device_put(np.asarray(a), self._sharding), item)
+        else:
+            item = jax.tree.map(lambda a: jax.device_put(np.asarray(a)), item)
+        return item

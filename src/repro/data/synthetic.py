@@ -1,0 +1,58 @@
+"""Synthetic datasets (no network access in this container).
+
+- ``imagenet_like``: structured class-conditional images — each class has a
+  distinct spatial frequency signature plus noise, so classification is
+  learnable and precision-sensitive (a meaningful validation set for the
+  inexact-mode analysis, unlike pure noise).
+- ``token_stream`` / ``lm_batches``: a Zipf-distributed Markov token stream
+  for LM training of the assigned transformer architectures.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def imagenet_like(key: jax.Array, n: int, *, hw: int = 64,
+                  num_classes: int = 10) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(images (n,3,hw,hw) in [0,1]-ish, labels (n,))."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    labels = jax.random.randint(k1, (n,), 0, num_classes)
+    yy, xx = jnp.meshgrid(jnp.arange(hw), jnp.arange(hw), indexing="ij")
+    # class c -> sinusoid of frequency (c+1) at a class-specific angle
+    freqs = (labels[:, None, None] + 1).astype(jnp.float32)
+    angle = labels[:, None, None].astype(jnp.float32) * (np.pi / num_classes)
+    pattern = jnp.sin((xx * jnp.cos(angle) + yy * jnp.sin(angle))
+                      * freqs * (2 * np.pi / hw))
+    base = pattern[:, None, :, :].repeat(3, axis=1)
+    chroma = jax.random.normal(k2, (n, 3, 1, 1)) * 0.1
+    noise = jax.random.normal(k3, (n, 3, hw, hw)) * 0.25
+    return (base + chroma + noise).astype(jnp.float32), labels
+
+
+def token_stream(seed: int, length: int, vocab: int) -> np.ndarray:
+    """Zipf unigram + order-1 Markov structure (so loss is reducible)."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, vocab + 1)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    toks = rng.choice(vocab, size=length, p=probs)
+    # inject bigram structure: with p=0.3, next token = f(prev)
+    follow = rng.permutation(vocab)
+    mask = rng.random(length) < 0.3
+    toks[1:][mask[1:]] = follow[toks[:-1][mask[1:]]]
+    return toks.astype(np.int32)
+
+
+def lm_batches(seed: int, batch: int, seq_len: int, vocab: int,
+               steps: int) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Yields (tokens, labels) with labels = next-token shift."""
+    need = steps * batch * (seq_len + 1)
+    stream = token_stream(seed, need, vocab)
+    for s in range(steps):
+        chunk = stream[s * batch * (seq_len + 1):(s + 1) * batch * (seq_len + 1)]
+        chunk = chunk.reshape(batch, seq_len + 1)
+        yield chunk[:, :-1], chunk[:, 1:]

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: OLP direct convolution on map-major data.
+
+This is the paper's hot loop (Fig. 6) adapted to the TPU memory hierarchy:
+
+  * Thread-level OLP (§IV-A): each grid cell owns an output tile — one
+    (batch, output-channel-group) pair — and performs the *entire*
+    Cin x Kh x Kw reduction locally in a VMEM f32 scratch accumulator.
+    No cross-cell reduction exists, exactly the property the paper uses to
+    pick OLP over KLP/FLP.
+  * Intra-thread vectorized MAC (§IV-B): operands are map-major, so the
+    u-wide channel group sits in the TPU lane dimension; each (kh, kw)
+    step is a (pixels, u_in) @ (u_in, u_out) dot on the MXU — the paper's
+    u-way vector MAC with u = 128.
+  * Zero-overhead dynamic reordering (§IV-B-1): the output BlockSpec writes
+    (N, Go, Ho, Wo, u) directly — map-major — so the next layer consumes it
+    with no relayout, the Eqs. (3)-(5) trick expressed as a block layout.
+
+Grid: (N, Go, Gi); the innermost Gi dimension accumulates input-channel
+groups into the revisited output block (standard TPU sequential-grid
+accumulation).  Stride-s convolution uses contiguous slice + reshape
+(slice [kh : kh + Ho*s] -> (Ho, s) -> take phase 0), which keeps all
+indexing static for Mosaic.
+
+VMEM envelope: the input block holds one batch element's full padded
+spatial extent for one channel group: H_pad * W_pad * u * bytes.  At
+u = 128 / bf16 this supports spatial sizes up to ~224x224 in ~13 MB; all
+paper workload layers after conv1 are far smaller.  ops.py enforces the
+envelope and falls back to the XLA path above it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.precision import ComputeMode
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int,
+                 stride: int, h_out: int, w_out: int, n_gi: int,
+                 out_dtype, acc_dtype):
+    """One grid cell: accumulate one input-channel group into the output tile.
+
+    x_ref: (1, 1, H_pad, W_pad, u_in)   one batch elem, one input group
+    w_ref: (1, u_out, 1, kh, kw, u_in)  weights for this (go, gi) pair
+    o_ref: (1, 1, h_out, w_out, u_out)  revisited across the gi grid dim
+    acc_ref: VMEM scratch (h_out * w_out, u_out) in acc_dtype
+    """
+    gi = pl.program_id(2)
+
+    @pl.when(gi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0, 0]                       # (H_pad, W_pad, u_in)
+    u_in = x.shape[-1]
+    u_out = o_ref.shape[-1]
+
+    acc = acc_ref[...]
+    for dh in range(kh):
+        for dw in range(kw):
+            # strided rows: dh, dh+s, ..., dh+(h_out-1)s  (static slicing)
+            rows = x[dh:dh + h_out * stride]
+            rows = rows.reshape(h_out, stride, *rows.shape[1:])[:, 0]
+            cols = rows[:, dw:dw + w_out * stride]
+            cols = cols.reshape(h_out, w_out, stride, u_in)[:, :, 0]
+            patch = cols.reshape(h_out * w_out, u_in)
+            wk = w_ref[0, :, 0, dh, dw, :]          # (u_out, u_in)
+            acc = acc + jax.lax.dot_general(
+                patch, wk, (((1,), (1,)), ((), ())),
+                preferred_element_type=acc_dtype)
+    acc_ref[...] = acc
+
+    @pl.when(gi == n_gi - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...].reshape(h_out, w_out, u_out).astype(out_dtype)
+
+
+def conv_mapmajor(x_mm: jnp.ndarray, w_mm: jnp.ndarray, *, stride: int = 1,
+                  out_hw=None,
+                  mode: ComputeMode = ComputeMode.RELAXED,
+                  interpret: bool = True) -> jnp.ndarray:
+    """Map-major OLP convolution.
+
+    x_mm: (N, Gi, H_pad, W_pad, u)   map-major, already padded for SAME
+    w_mm: (Go, u_out, Gi, Kh, Kw, u) map-major weights (synthesis-time order)
+    returns (N, Go, Ho, Wo, u) map-major — directly consumable by the next
+    layer (the zero-overhead reorder).
+    """
+    n, n_gi, h_pad, w_pad, u = x_mm.shape
+    n_go, u_out, n_gi2, kh, kw, u2 = w_mm.shape
+    assert n_gi == n_gi2 and u == u2, (x_mm.shape, w_mm.shape)
+    if out_hw is None:
+        h_out = (h_pad - kh) // stride + 1
+        w_out = (w_pad - kw) // stride + 1
+    else:
+        h_out, w_out = out_hw
+    # the halo trick slices [d : d + out*s], needs pad_len >= out*s + k - 1
+    assert h_pad >= h_out * stride + kh - 1, "pad input to out*s+k-1"
+    assert w_pad >= w_out * stride + kw - 1, "pad input to out*s+k-1"
+
+    operand_dtype = mode.operand_dtype
+    acc_dtype = mode.accum_dtype
+    out_dtype = mode.out_dtype
+
+    kernel = functools.partial(
+        _conv_kernel, kh=kh, kw=kw, stride=stride, h_out=h_out, w_out=w_out,
+        n_gi=n_gi, out_dtype=out_dtype, acc_dtype=acc_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n, n_go, n_gi),
+        in_specs=[
+            pl.BlockSpec((1, 1, h_pad, w_pad, u), lambda b, go, gi: (b, gi, 0, 0, 0)),
+            pl.BlockSpec((1, u_out, 1, kh, kw, u), lambda b, go, gi: (go, 0, gi, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, h_out, w_out, u_out),
+                               lambda b, go, gi: (b, go, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_go, h_out, w_out, u_out), out_dtype),
+        scratch_shapes=[pltpu.VMEM((h_out * w_out, u_out), acc_dtype)],
+        interpret=interpret,
+    )(x_mm.astype(operand_dtype), w_mm.astype(operand_dtype))

@@ -1,0 +1,75 @@
+"""Jit'd public wrapper for the map-major OLP conv kernel.
+
+Handles the NCHW <-> map-major boundary, SAME/VALID padding (including the
+stride-halo rows the kernel's slice-reshape trick needs), channel-group
+padding, and the VMEM envelope check with an XLA fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.layout import LANES, from_map_major, to_map_major
+from ...core.precision import ComputeMode
+from .conv_mapmajor import conv_mapmajor
+from .ref import pack_weights
+
+# Per-block VMEM budget for the input block (bytes); above it we fall back.
+VMEM_INPUT_BUDGET = 24 * 1024 * 1024
+
+
+def _pad_amounts(h, k, s, padding):
+    if padding == "SAME":
+        out = -(-h // s)
+    elif padding == "VALID":
+        out = (h - k) // s + 1
+    else:
+        raise ValueError(padding)
+    needed = (out - 1) * s + k
+    before = (max(needed - h, 0) // 2) if padding == "SAME" else 0
+    after = max(needed - h - before, 0)
+    # halo for the kernel's strided slice-reshape trick
+    halo = (s - 1) if s > 1 else 0
+    return out, before, after + halo
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "mode", "u",
+                                             "interpret"))
+def conv2d_mapmajor(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
+                    stride: int = 1, padding: str = "SAME",
+                    mode: ComputeMode = ComputeMode.RELAXED,
+                    u: int = LANES, interpret: bool = True) -> jnp.ndarray:
+    """NCHW in, NCHW out; map-major + Pallas OLP inside.
+
+    x: (N, Cin, H, W); w: (Cout, Cin, Kh, Kw); optional bias (Cout,).
+    """
+    n, cin, h, wdim = x.shape
+    cout, _, kh, kw = w.shape
+    h_out, ph0, ph1 = _pad_amounts(h, kh, stride, padding)
+    w_out, pw0, pw1 = _pad_amounts(wdim, kw, stride, padding)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (ph0, ph1), (pw0, pw1)))
+
+    x_mm = to_map_major(xp, u, channel_axis=1)
+    w_mm = pack_weights(w, u)
+
+    out_mm = conv_mapmajor(x_mm, w_mm, stride=stride, out_hw=(h_out, w_out),
+                           mode=mode, interpret=interpret)
+    out = from_map_major(out_mm, cout, channel_axis=1)
+    if b is not None:
+        out = out + b[None, :, None, None].astype(out.dtype)
+    return out
+
+
+def input_block_vmem_bytes(h_pad: int, w_pad: int, u: int,
+                           mode: ComputeMode) -> int:
+    return h_pad * w_pad * u * jnp.dtype(mode.operand_dtype).itemsize
+
+
+def fits_vmem(h: int, w: int, k: int, stride: int, padding: str, u: int,
+              mode: ComputeMode) -> bool:
+    _, p0, p1 = _pad_amounts(h, k, stride, padding)
+    _, q0, q1 = _pad_amounts(w, k, stride, padding)
+    return input_block_vmem_bytes(h + p0 + p1, w + q0 + q1, u, mode) \
+        <= VMEM_INPUT_BUDGET

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the map-major OLP conv kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from ...core.layout import from_map_major, to_map_major
+from ...core.precision import ComputeMode
+
+
+def conv_mapmajor_ref(x_mm: jnp.ndarray, w_mm: jnp.ndarray, *, stride: int = 1,
+                      mode: ComputeMode = ComputeMode.RELAXED) -> jnp.ndarray:
+    """Reference: un-reorder to NCHW/OIHW, run lax conv, re-reorder.
+
+    The kernel must be numerically equivalent to this composition — that is
+    precisely the paper's claim that map-major reordering changes layout,
+    not semantics.
+    """
+    n, n_gi, h_pad, w_pad, u = x_mm.shape
+    n_go, u_out, _, kh, kw, _ = w_mm.shape
+    cin = n_gi * u
+    cout = n_go * u_out
+    x = from_map_major(x_mm, cin)                      # (N, Cin, Hp, Wp)
+    # (Go, u_out, Gi, Kh, Kw, u) -> (Go*u_out, Gi, Kh, Kw, u) -> OIHW
+    w_flat = w_mm.reshape(cout, n_gi, kh, kw, u)
+    w = from_map_major(w_flat, cin, channel_axis=1)    # (Cout, Cin, Kh, Kw)
+    out = lax.conv_general_dilated(
+        x.astype(mode.operand_dtype), w.astype(mode.operand_dtype),
+        (stride, stride), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        precision=mode.lax_precision,
+        preferred_element_type=mode.accum_dtype).astype(mode.out_dtype)
+    # back to map-major; halo-trick parity: kernel computes (h_pad-kh)//s+1
+    # rows which may exceed lax's count when pad includes the +s-1 halo --
+    # callers pad so the two agree (ops.py guarantees this).
+    return to_map_major(out, u, channel_axis=1)
+
+
+def pack_weights(w_oihw: jnp.ndarray, u: int) -> jnp.ndarray:
+    """Synthesis-time weight reorder: OIHW -> (Go, u_out, Gi, Kh, Kw, u_in).
+
+    Static, zero runtime cost (paper §IV-B: 'Parameter reordering ... occurs
+    during compile-time').
+    """
+    m = w_oihw.shape[0]
+    w_mm = to_map_major(w_oihw, u, channel_axis=1)     # (M, Gi, Kh, Kw, u)
+    n_go = -(-m // u)
+    pad = n_go * u - m
+    if pad:
+        w_mm = jnp.pad(w_mm, ((0, pad), (0, 0), (0, 0), (0, 0), (0, 0)))
+    return w_mm.reshape(n_go, u, *w_mm.shape[1:])

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: blocked matmul under Cappuccino compute modes.
+
+The FC / 1x1-conv / transformer-projection hot path.  Map-major grouping is
+the identity for a 2-D operand (the reduction dim is already minor), so the
+paper's C2 contribution here reduces to MXU-aligned (multiple-of-128)
+blocking; C4 (inexact modes) chooses the operand/accumulator dtypes:
+
+  PRECISE        f32 x f32 -> f32 accum (runs below MXU peak — the paper's
+                 'vector processing unavailable in precise mode')
+  RELAXED        bf16 x bf16 -> f32 accum (MXU native)
+  IMPRECISE      bf16 x bf16 -> bf16 accum
+  IMPRECISE_INT8 weights arrive pre-dequantized to bf16 by the wrapper.
+
+Grid (M/bm, N/bn, K/bk), K innermost, f32/bf16 VMEM scratch accumulator,
+output block revisited across K steps — the canonical TPU matmul schedule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.precision import ComputeMode
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int, out_dtype, acc_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype)
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def matmul_mapmajor(a: jnp.ndarray, b: jnp.ndarray, *,
+                    mode: ComputeMode = ComputeMode.RELAXED,
+                    bm: int = 256, bn: int = 256, bk: int = 512,
+                    interpret: bool = True) -> jnp.ndarray:
+    """(M, K) @ (K, N) under a compute mode.  Dims must divide the blocks
+    (the ops.py wrapper pads)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (a.shape, b.shape, (bm, bn, bk))
+
+    kernel = functools.partial(_mm_kernel, n_k=k // bk,
+                               out_dtype=mode.out_dtype,
+                               acc_dtype=mode.accum_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), mode.out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), mode.accum_dtype)],
+        interpret=interpret,
+    )(a.astype(mode.operand_dtype), b.astype(mode.operand_dtype))

@@ -1,0 +1,42 @@
+"""Jit'd wrapper: padding to block multiples + int8 weight handling."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.precision import ComputeMode, QuantizedTensor
+from .matmul_mapmajor import matmul_mapmajor
+
+
+def _pad_to(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk",
+                                             "interpret"))
+def _matmul_padded(a, b, mode, bm, bn, bk, interpret):
+    m, n = a.shape[0], b.shape[1]
+    ap = _pad_to(a, bm, bk)
+    bp = _pad_to(b, bk, bn)
+    out = matmul_mapmajor(ap, bp, mode=mode, bm=bm, bn=bn, bk=bk,
+                          interpret=interpret)
+    return out[:m, :n]
+
+
+def matmul(a, w, *, mode: ComputeMode = ComputeMode.RELAXED,
+           bm: int = 256, bn: int = 256, bk: int = 512,
+           interpret: bool = True):
+    """(..., K) @ (K, N) with per-mode arithmetic; int8 weights dequantized
+    at synthesis-prepared scale (IMPRECISE_INT8)."""
+    if isinstance(w, QuantizedTensor):
+        w = w.dequantize(mode.operand_dtype)
+    lead = a.shape[:-1]
+    a2 = a.reshape(-1, a.shape[-1])
+    out = _matmul_padded(a2, w, mode, bm, bn, bk, interpret)
+    return out.reshape(*lead, w.shape[1])

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the mode-matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.precision import ComputeMode, mode_dot
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray, *,
+               mode: ComputeMode = ComputeMode.RELAXED) -> jnp.ndarray:
+    return mode_dot(a, b, mode)

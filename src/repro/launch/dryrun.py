@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape) pair on the
+production meshes, with 512 placeholder host devices standing in for the
+2-pod v5e fleet.  This is the proof that the distribution config is
+coherent: sharding mismatches, compile-time OOM, and unsupported
+collectives all surface here as hard failures.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b \
+      --shape train_4k [--multipod] [--json out.json] [--layers-override N]
+
+``--layers-override`` lowers a reduced-depth variant (same width) — used by
+the roofline extraction to measure per-layer-group cost deltas (XLA's cost
+analysis counts scan bodies once; see EXPERIMENTS.md §Roofline method).
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from collections import Counter, defaultdict
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum operand bytes of collective ops in post-SPMD HLO text.
+
+    Counts each textual op once (scan bodies appear once — callers apply the
+    trip-count correction; see roofline notes).
+    """
+    dtype_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+                   "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+                   "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+    stats = defaultdict(lambda: {"count": 0, "bytes": 0})
+    line_pat = re.compile(
+        r"=\s*(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(?:-start)?\(")
+    shape_pat = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([\d,]*)\]")
+    for line in hlo_text.splitlines():
+        m = line_pat.search(line)
+        if not m:
+            continue
+        kind = m.group(2)
+        out_sig = m.group(1)
+        nbytes = 0
+        for dm in shape_pat.finditer(out_sig):
+            dt, dims = dm.group(1), dm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * dtype_bytes[dt]
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += nbytes
+    return dict(stats)
+
+
+def run_pair(arch: str, shape: str, *, multi_pod: bool,
+             layers_override: int = 0, hlo_out: str = "") -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import (build_lowering, shape_skipped,
+                                    window_override_for)
+
+    cfg = get_config(arch)
+    reason = shape_skipped(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+
+    if layers_override:
+        period = cfg.pattern_period
+        n = layers_override * period
+        enc = layers_override if cfg.encoder_layers else 0
+        cfg = dataclasses.replace(cfg, num_layers=n, encoder_layers=enc)
+
+    from repro.nn.sharding import activate_mesh
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    spec = build_lowering(cfg, shape, mesh)
+    with mesh, activate_mesh(mesh):
+        lowered = jax.jit(spec.fn, donate_argnums=spec.donate).lower(*spec.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+    if hlo_out:
+        with open(hlo_out, "w") as f:
+            f.write(hlo)
+
+    result = {
+        "arch": arch, "shape": shape,
+        "multi_pod": multi_pod,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "layers_override": layers_override,
+        "lower_seconds": round(t_lower, 1),
+        "compile_seconds": round(t_compile, 1),
+        "flops_per_device": cost.get("flops", 0.0),
+        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "collectives": coll,
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--layers-override", type=int, default=0)
+    ap.add_argument("--json", default="")
+    ap.add_argument("--hlo-out", default="")
+    # batch mode: all shapes x meshes (x variants) for one arch, one process
+    ap.add_argument("--batch-out", default="",
+                    help="directory: run all shapes/meshes, write per-pair JSONs")
+    ap.add_argument("--variants", action="store_true")
+    ap.add_argument("--skip-multipod", action="store_true")
+    args = ap.parse_args()
+
+    if args.batch_out:
+        import gc
+        os.makedirs(args.batch_out, exist_ok=True)
+        shapes = [args.shape] if args.shape else list(
+            ("train_4k", "prefill_32k", "decode_32k", "long_500k"))
+        jobs = []
+        for shape in shapes:
+            for mp in ([False] if args.skip_multipod else [False, True]):
+                jobs.append((shape, mp, 0))
+                if args.variants and not mp:
+                    jobs += [(shape, mp, 1), (shape, mp, 2)]
+        for shape, mp, g in jobs:
+            tag = f"{args.arch}.{shape}.{'2x16x16' if mp else '16x16'}"
+            if g:
+                tag += f".g{g}"
+            out = os.path.join(args.batch_out, tag + ".json")
+            if os.path.exists(out):
+                with open(out) as f:
+                    if json.load(f).get("status") in ("ok", "skipped"):
+                        print(f"{tag}: cached", flush=True)
+                        continue
+            t0 = time.time()
+            try:
+                result = run_pair(args.arch, shape, multi_pod=mp,
+                                  layers_override=g)
+            except Exception as e:
+                result = {"arch": args.arch, "shape": shape, "multi_pod": mp,
+                          "mesh": "2x16x16" if mp else "16x16",
+                          "layers_override": g, "status": "error",
+                          "error": f"{type(e).__name__}: {e}"}
+            with open(out, "w") as f:
+                json.dump(result, f, indent=1, default=str)
+            print(f"{tag}: {result['status']} ({time.time() - t0:.0f}s)",
+                  flush=True)
+            gc.collect()
+        return
+
+    try:
+        result = run_pair(args.arch, args.shape, multi_pod=args.multipod,
+                          layers_override=args.layers_override,
+                          hlo_out=args.hlo_out)
+    except Exception as e:  # report failures as data, exit nonzero
+        result = {"arch": args.arch, "shape": args.shape,
+                  "multi_pod": args.multipod, "status": "error",
+                  "error": f"{type(e).__name__}: {e}"}
+    print(json.dumps(result, indent=1, default=str))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    sys.exit(0 if result["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

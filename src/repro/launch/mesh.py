@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: 256 chips as (16 data, 16 model).
+Multi-pod:  512 chips as (2 pod, 16 data, 16 model) — the "pod" axis is the
+cross-ICI/DCN boundary; batch shards over (pod, data).
+
+Functions, not module constants: importing this module must never touch JAX
+device state (the dry-run sets XLA_FLAGS before first init).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices[:need]).reshape(shape), axes)
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    import numpy as np
+    devices = jax.devices()[: data * model]
+    return jax.sharding.Mesh(np.asarray(devices).reshape(data, model),
+                             ("data", "model"))

@@ -1,0 +1,296 @@
+"""Input specifications and step functions for every (arch x shape) pair.
+
+``input_specs(cfg, shape, mesh)`` returns ShapeDtypeStructs with attached
+NamedShardings (weak-type-correct, shardable, zero allocation) plus the
+step function to lower — the contract the multi-pod dry-run and the
+roofline extraction share.
+
+Shapes (assigned):
+  train_4k     seq 4096   global batch 256   train_step
+  prefill_32k  seq 32768  global batch 32    prefill
+  decode_32k   seq 32768  global batch 128   serve_step (1 token, full cache)
+  long_500k    seq 524288 global batch 1     serve_step (sub-quadratic policy)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.precision import ComputeMode
+from ..nn import model as M
+from ..nn.attention import KVCache
+from ..nn.config import ModelConfig
+from ..nn.model import param_axes
+from ..nn.sharding import batch_axes, spec_for
+from ..nn import sharding as S
+from ..optim import adamw_init, adamw_update, cosine_schedule
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+def shape_skipped(cfg: ModelConfig, shape: str) -> Optional[str]:
+    """Returns a reason string if this (arch, shape) pair is a documented
+    skip, else None."""
+    if shape == "long_500k" and cfg.long_context == "skip":
+        return (f"{cfg.name}: encoder-decoder with bounded decoder; 524k "
+                "decode has no semantics (DESIGN.md)")
+    return None
+
+
+def window_override_for(cfg: ModelConfig, shape: str) -> int:
+    if shape == "long_500k" and cfg.long_context == "sliding_override":
+        return cfg.long_context_window
+    return 0
+
+
+def _shardable(n: int, axes: Tuple[str, ...], mesh: Mesh) -> Tuple[str, ...]:
+    size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    return axes if axes and n % size == 0 and n >= size else ()
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, mode: str):
+    axes_tree = param_axes(cfg)
+    def to_sharding(axes):
+        # guard divisibility: drop mesh axes that don't divide (rare dims)
+        return NamedSharding(mesh, spec_for(axes, mode, cfg))
+    return jax.tree.map(
+        to_sharding, axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(a is None or isinstance(a, str) for a in x))
+
+
+def _validate_divisible(abstract, shardings):
+    """Replace mesh axes that don't divide the dim with None (replicate)."""
+    def fix(sds, sh):
+        spec = list(sh.spec) + [None] * (len(sds.shape) - len(sh.spec))
+        out = []
+        for dim, ax in zip(sds.shape, spec):
+            if ax is None:
+                out.append(None)
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = math.prod(sh.mesh.shape[a] for a in axes)
+            out.append(ax if dim % size == 0 else None)
+        return NamedSharding(sh.mesh, P(*out))
+    return jax.tree.map(fix, abstract, shardings,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def abstract_sharded_params(cfg: ModelConfig, mesh: Mesh, mode: str,
+                            dtype=jnp.bfloat16):
+    ab = M.abstract_params(cfg, dtype)
+    sh = param_shardings(cfg, mesh, mode)
+    sh = _validate_divisible(ab, sh)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        ab, sh, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _aux_spec(cfg: ModelConfig, batch: int, mesh: Mesh, baxes):
+    if cfg.is_encoder_decoder:
+        return _sds((batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16,
+                    mesh, P(baxes or None, None, None))
+    if cfg.num_image_tokens:
+        return _sds((batch, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16,
+                    mesh, P(baxes or None, None, None))
+    return None
+
+
+def _cache_specs(cfg: ModelConfig, batch: int, seq_len: int, mesh: Mesh,
+                 window_override: int, baxes):
+    """Abstract cache with shardings: batch over data axes (when divisible),
+    fused kv / inner dims over 'model'."""
+    ab = M.init_cache(cfg, batch, seq_len, window_override=window_override,
+                      abstract=True)
+    bspec = baxes or None
+
+    def attach(leaf):
+        shape = leaf.shape
+        # leaves: (G, B, ...) — shard B on data axes, widest trailing dim on model
+        spec = [None] * len(shape)
+        if len(shape) >= 2:
+            spec[1] = bspec
+        # find the widest trailing dim divisible by the model axis
+        msize = mesh.shape["model"]
+        for i in range(len(shape) - 1, 1, -1):
+            if shape[i] % msize == 0 and shape[i] >= msize:
+                spec[i] = "model"
+                break
+        sh = NamedSharding(mesh, P(*spec))
+        return jax.ShapeDtypeStruct(shape, leaf.dtype, sharding=sh)
+
+    return jax.tree.map(attach, ab,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+@dataclass
+class LoweringSpec:
+    """Everything needed to lower one (arch x shape) pair on a mesh."""
+    name: str
+    fn: Callable                   # jit-able step function
+    args: Tuple[Any, ...]          # abstract inputs (SDS w/ shardings)
+    donate: Tuple[int, ...] = ()
+
+
+def default_microbatches(cfg: ModelConfig, global_batch: int,
+                         seq_len: int, batch_width: int = 16) -> int:
+    """Gradient-accumulation factor: keep one microbatch's activation
+    checkpoints (L x B_dev x S x d x 2B) under ~3 GB/device.
+
+    ``batch_width`` = product of the mesh axes the batch shards over (16
+    single-pod, 32 multi-pod).  Each microbatch must stay divisible by it —
+    a microbatch smaller than the batch width replicates activations on
+    every device (measured: 313 GB/device on 2x16x16 until this constraint
+    was added)."""
+    b_unit = max(global_batch // batch_width, 1)   # max microbatch count
+    b_dev = max(global_batch // batch_width, 1)
+    act = cfg.num_layers * b_dev * seq_len * cfg.d_model * 2
+    # smallest divisor of b_unit keeping per-microbatch activations under
+    # budget (act scales as 1/mb since B_dev does)
+    for mb in sorted(d for d in range(1, b_unit + 1) if b_unit % d == 0):
+        if act / mb <= 3 * 1024 ** 3:
+            return mb
+    return b_unit
+
+
+def make_train_step(cfg: ModelConfig, mode: ComputeMode = ComputeMode.RELAXED,
+                    microbatches: int = 1, param_shardings=None):
+    def grads_of(params, tokens, labels, aux):
+        def loss_fn(p):
+            return M.loss_fn(p, tokens, labels, cfg, aux=aux, mode=mode)
+        return jax.value_and_grad(loss_fn)(params)
+
+    def pin_grads(g):
+        """Keep the gradient-accumulator scan carry sharded like the params
+        — unconstrained, SPMD may replicate the full f32 gradient tree per
+        device on the multi-pod mesh (measured: 313 GB/device temps)."""
+        if param_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            param_shardings)
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, grads = grads_of(params, batch["tokens"], batch["labels"],
+                                   batch.get("aux"))
+        else:
+            # gradient accumulation: only one microbatch's activation
+            # checkpoints live at a time (how the 64-100 layer configs fit)
+            def split(a):
+                return a.reshape(microbatches, a.shape[0] // microbatches,
+                                 *a.shape[1:])
+            mbatch = {k: split(v) for k, v in batch.items()}
+
+            def one(carry, mb):
+                from ..nn.sharding import BATCH, constrain
+                acc_loss, acc_g = carry
+                # re-pin batch sharding: the (mb, B/mb, ...) reshape can
+                # lose the (pod, data) partition on the multi-pod mesh
+                mb = {k: constrain(v, BATCH, *([None] * (v.ndim - 1)))
+                      for k, v in mb.items()}
+                loss, g = grads_of(params, mb["tokens"], mb["labels"],
+                                   mb.get("aux"))
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+                return (acc_loss + loss, pin_grads(acc_g)), None
+
+            zero_g = pin_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (loss, grads), _ = jax.lax.scan(one, (jnp.float32(0), zero_g),
+                                            mbatch)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        lr = cosine_schedule(opt_state.step, peak_lr=3e-4, warmup=100,
+                             total=10000)
+        new_params, new_state = adamw_update(grads, opt_state, params, lr=lr)
+        return new_params, new_state, loss
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, window_override: int,
+                      mode: ComputeMode = ComputeMode.RELAXED):
+    def prefill_step(params, tokens, aux=None):
+        return M.prefill(params, tokens, cfg, aux=aux, mode=mode,
+                         window_override=window_override)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, window_override: int,
+                    mode: ComputeMode = ComputeMode.RELAXED):
+    def serve_step(params, caches, token, pos):
+        return M.decode_step(params, caches, token, pos, cfg, mode=mode,
+                             window_override=window_override)
+    return serve_step
+
+
+def build_lowering(cfg: ModelConfig, shape: str, mesh: Mesh,
+                   mode: ComputeMode = ComputeMode.RELAXED) -> LoweringSpec:
+    info = SHAPES[shape]
+    seq, gbatch, kind = info["seq_len"], info["global_batch"], info["kind"]
+    reason = shape_skipped(cfg, shape)
+    if reason:
+        raise ValueError(f"skipped pair: {reason}")
+    wo = window_override_for(cfg, shape)
+    baxes_t = _shardable(gbatch, batch_axes(mesh), mesh)
+    baxes = baxes_t if baxes_t else None
+
+    if kind == "train":
+        params = abstract_sharded_params(cfg, mesh, "train", jnp.float32)
+        # AdamW moments shard exactly like their parameters (f32)
+        def as_moment(p):
+            return jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                        sharding=p.sharding)
+        moments = jax.tree.map(as_moment, params,
+                               is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        from ..optim import AdamWState
+        opt = AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32,
+                                      sharding=NamedSharding(mesh, P())),
+            mu=moments,
+            nu=jax.tree.map(lambda x: x, moments))
+        batch = {"tokens": _sds((gbatch, seq), jnp.int32, mesh, P(baxes, None)),
+                 "labels": _sds((gbatch, seq), jnp.int32, mesh, P(baxes, None))}
+        aux = _aux_spec(cfg, gbatch, mesh, baxes)
+        if aux is not None:
+            batch["aux"] = aux
+        bw = math.prod(mesh.shape[a] for a in batch_axes(mesh))
+        mb = default_microbatches(cfg, gbatch, seq, batch_width=bw)
+        psh = jax.tree.map(lambda p: p.sharding, params,
+                           is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        return LoweringSpec(name=f"{cfg.name}:{shape}",
+                            fn=make_train_step(cfg, mode, microbatches=mb,
+                                               param_shardings=psh),
+                            args=(params, opt, batch), donate=(0, 1))
+
+    params = abstract_sharded_params(cfg, mesh, "infer", jnp.bfloat16)
+    if kind == "prefill":
+        tokens = _sds((gbatch, seq), jnp.int32, mesh, P(baxes, None))
+        aux = _aux_spec(cfg, gbatch, mesh, baxes)
+        args = (params, tokens) + ((aux,) if aux is not None else ())
+        return LoweringSpec(name=f"{cfg.name}:{shape}",
+                            fn=make_prefill_step(cfg, wo, mode), args=args)
+
+    # decode
+    caches = _cache_specs(cfg, gbatch, seq, mesh, wo, baxes)
+    token = _sds((gbatch, 1), jnp.int32, mesh, P(baxes, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return LoweringSpec(name=f"{cfg.name}:{shape}",
+                        fn=make_serve_step(cfg, wo, mode),
+                        args=(params, caches, token, pos), donate=(1,))

@@ -1,0 +1,98 @@
+"""Dry-run sweep driver: every (arch x shape x mesh) + reduced-depth
+variants for the roofline trip-count correction.
+
+Each pair runs in a fresh subprocess (jax device-count is locked at first
+init; isolation also bounds compile memory).  Results land in
+results/dryrun/<arch>.<shape>.<mesh>[.gN].json; existing files are skipped,
+so the sweep is resumable.
+
+  PYTHONPATH=src python -m repro.launch.sweep [--only-mesh pod|multipod]
+      [--arch A] [--shape S] [--variants] [--timeout 1200]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = ["granite-moe-1b-a400m", "xlstm-350m", "whisper-small", "hymba-1.5b",
+         "qwen2-7b", "gemma2-9b", "qwen3-32b", "command-r-plus-104b",
+         "llama-3.2-vision-90b", "qwen3-moe-235b-a22b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+OUT_DIR = "results/dryrun"
+
+
+def run_one(arch, shape, multipod, layers_override, timeout):
+    tag = f"{arch}.{shape}.{'2x16x16' if multipod else '16x16'}"
+    if layers_override:
+        tag += f".g{layers_override}"
+    out = os.path.join(OUT_DIR, tag + ".json")
+    if os.path.exists(out):
+        with open(out) as f:
+            prev = json.load(f)
+        if prev.get("status") in ("ok", "skipped"):
+            return prev["status"], 0.0
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--json", out]
+    if multipod:
+        cmd.append("--multipod")
+    if layers_override:
+        cmd += ["--layers-override", str(layers_override)]
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        status = "ok" if proc.returncode == 0 else "error"
+        if status == "error" and not os.path.exists(out):
+            with open(out, "w") as f:
+                json.dump({"arch": arch, "shape": shape, "status": "error",
+                           "error": proc.stdout[-2000:] + proc.stderr[-2000:]},
+                          f, indent=1)
+        if os.path.exists(out):
+            with open(out) as f:
+                status = json.load(f).get("status", status)
+    except subprocess.TimeoutExpired:
+        status = "timeout"
+        with open(out, "w") as f:
+            json.dump({"arch": arch, "shape": shape, "status": "timeout"}, f)
+    return status, time.time() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="")
+    ap.add_argument("--shape", default="")
+    ap.add_argument("--only-mesh", default="", choices=["", "pod", "multipod"])
+    ap.add_argument("--variants", action="store_true",
+                    help="also run G=1/G=2 depth variants (roofline deltas)")
+    ap.add_argument("--timeout", type=int, default=1500)
+    args = ap.parse_args()
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else SHAPES
+    meshes = {"pod": [False], "multipod": [True]}.get(args.only_mesh,
+                                                      [False, True])
+    jobs = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                jobs.append((arch, shape, mp, 0))
+                if args.variants and not mp:
+                    jobs.append((arch, shape, mp, 1))
+                    jobs.append((arch, shape, mp, 2))
+    print(f"{len(jobs)} jobs", flush=True)
+    for i, (arch, shape, mp, g) in enumerate(jobs):
+        status, dt = run_one(arch, shape, mp, g, args.timeout)
+        mesh = "2x16x16" if mp else "16x16"
+        print(f"[{i + 1}/{len(jobs)}] {arch:24s} {shape:12s} {mesh:8s} "
+              f"g={g or 'full'}: {status} ({dt:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

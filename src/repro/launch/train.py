@@ -1,0 +1,85 @@
+"""Training launcher.
+
+Runs real steps on the available devices (CPU for local runs; the same code
+lowers for the production mesh).  Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m \
+      --layers 2 --d-model 256 --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.precision import ComputeMode
+from repro.data import DataPipeline, lm_batches
+from repro.launch.mesh import make_host_mesh
+from repro.launch.specs import make_train_step
+from repro.nn import model as M
+from repro.optim import adamw_init
+from repro.checkpoint import save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mode", default="relaxed",
+                    choices=[m.value for m in ComputeMode])
+    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.layers or args.d_model:
+        cfg = cfg.scaled_down(layers=args.layers or None,
+                              d_model=args.d_model or 256)
+    mode = ComputeMode(args.mode)
+
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg, mode), donate_argnums=(0, 1))
+
+    def batches():
+        for toks, labels in lm_batches(0, args.batch, args.seq,
+                                       cfg.vocab_size, args.steps):
+            batch = {"tokens": toks, "labels": labels}
+            if cfg.is_encoder_decoder:
+                batch["aux"] = np.zeros((args.batch, cfg.encoder_seq,
+                                         cfg.d_model), np.float32)
+            elif cfg.num_image_tokens:
+                batch["aux"] = np.zeros((args.batch, cfg.num_image_tokens,
+                                         cfg.d_model), np.float32)
+            yield batch
+
+    pipe = DataPipeline(batches())
+    losses = []
+    t0 = time.time()
+    for i, batch in enumerate(pipe):
+        params, opt, loss = step_fn(params, opt, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            l = float(loss)
+            losses.append(l)
+            print(f"step {i:5d} loss {l:.4f} "
+                  f"({(time.time() - t0) / max(i, 1):.2f}s/step)", flush=True)
+    print(f"final loss {float(loss):.4f} "
+          f"(start {losses[0]:.4f}) in {time.time() - t0:.1f}s")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, {"params": params}, step=args.steps)
+        print(f"saved {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

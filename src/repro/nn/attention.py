@@ -1,0 +1,275 @@
+"""Attention: GQA with rope/qk-norm/bias/softcap, causal + sliding-window +
+cross variants, chunked (online-softmax) execution, and KV-cache decode.
+
+The chunked formulation scans over key blocks with a running (max, denom,
+accum) triple, so the S x S score matrix is never materialized — required
+for the 32k prefill shapes to fit per-device HBM, and differentiable for
+training.  This is the OLP (C1) discipline at the attention level: each
+query tile owns its full reduction; no cross-shard softmax.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.precision import ComputeMode, mode_dot
+from .layers import rms_norm, rope, softcap
+from .sharding import BATCH, constrain, constrain_heads
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+class KVCache(NamedTuple):
+    """Fixed-capacity cache.  For sliding-window layers, capacity == window
+    and writes wrap (ring buffer) — O(window) memory at any context length.
+
+    Storage is *fused* (B, C, KV*hd): the kv-head and head-dim axes are
+    flattened so the cache shards on the "model" mesh axis even when
+    KV < mesh width (map-major thinking, C2: the vectorizable dim is kept
+    minor and contiguous)."""
+    k: jnp.ndarray            # (B, C, KV*hd)
+    v: jnp.ndarray            # (B, C, KV*hd)
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)) \
+        .reshape(b, s, kv * n_rep, hd)
+
+
+def _chunk_attn(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                q_pos: jnp.ndarray, k_pos: jnp.ndarray, causal: bool,
+                window: int, logit_cap: float, scale: float,
+                q_chunk: int = 256, k_chunk: int = 512) -> jnp.ndarray:
+    """Online-softmax attention: GQA-native, double-chunked (flash-style).
+
+    Outer lax.map over *checkpointed* query chunks, inner lax.scan over key
+    chunks with a running (max, denom, accum) triple.  Three memory rules
+    learned from the fleet dry-run:
+      * kv heads are NEVER repeated to H (the grouped einsum contracts each
+        kv head against its rep query heads) — a repeated 32k cache in f32
+        was the dominant decode temp;
+      * operands stay in their incoming dtype (bf16 under RELAXED) with f32
+        accumulation via preferred_element_type;
+      * one_q is jax.checkpoint'ed so the backward recomputes score blocks
+        instead of storing every (B,H,qc,kc) softmax residual (the dominant
+        train temp).
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0;
+    q_pos: (Sq,), k_pos: (Sk,) absolute positions (pos < 0 = invalid slot).
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    k_chunk = min(k_chunk, sk)
+    q_chunk = min(q_chunk, sq)
+
+    kpad = (-sk) % k_chunk
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, kpad), constant_values=-1)
+    qpad = (-sq) % q_chunk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, qpad), constant_values=0)
+    n_k = k.shape[1] // k_chunk
+    n_q = q.shape[1] // q_chunk
+
+    cdt = q.dtype                                         # compute dtype
+    # (B, KV, rep, n_q, qc, hd): head j = g*rep + r, matching fused storage
+    qg = (q * scale).astype(cdt).reshape(b, n_q, q_chunk, kv, rep, hd)
+    qg = qg.transpose(0, 3, 4, 1, 2, 5)
+    kg = k.astype(cdt).transpose(0, 2, 1, 3).reshape(b, kv, n_k, k_chunk, hd)
+    vg = v.astype(cdt).transpose(0, 2, 1, 3).reshape(b, kv, n_k, k_chunk, hd)
+    kp = k_pos.reshape(n_k, k_chunk)
+    qp = q_pos.reshape(n_q, q_chunk)
+
+    # sharding tier: kv-head groups on 'model' when they divide, else hd
+    from .sharding import active_mesh
+    mesh = active_mesh()
+    msize = mesh.shape.get("model", 1) if mesh is not None else 1
+    if kv % msize == 0 and kv >= msize:
+        g_ax, r_ax, d_ax = "model", None, None
+    elif rep % msize == 0 and rep >= msize:
+        g_ax, r_ax, d_ax = None, "model", None
+    elif hd % msize == 0:
+        g_ax, r_ax, d_ax = None, None, "model"
+    else:
+        g_ax = r_ax = d_ax = None
+
+    kg_s = jnp.moveaxis(kg, 2, 0)        # (n_k, B, KV, k_chunk, hd)
+    vg_s = jnp.moveaxis(vg, 2, 0)
+    kg_s = constrain(kg_s, None, BATCH, g_ax, None, d_ax)
+    vg_s = constrain(vg_s, None, BATCH, g_ax, None, d_ax)
+
+    @jax.checkpoint
+    def one_q(args):
+        q_blk, qp_blk = args             # (B,KV,rep,qc,hd), (qc,)
+        q_blk = constrain(q_blk, BATCH, g_ax, r_ax, None, d_ax)
+
+        # checkpoint per key-chunk too: the scan VJP otherwise stacks every
+        # (B,KV,rep,qc,kc) f32 score/softmax block across key steps
+        @jax.checkpoint
+        def body(carry, xs):
+            m_prev, l_prev, acc = carry
+            k_blk, v_blk, kp_blk = xs    # (B,KV,kc,hd) x2, (kc,)
+            acc = constrain(acc, BATCH, g_ax, r_ax, None, d_ax)
+            s = jnp.einsum("bgrqd,bgkd->bgrqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32)
+            s = softcap(s, logit_cap)
+            valid = kp_blk[None, :] >= 0                         # (1, kc)
+            if causal:
+                valid = valid & (kp_blk[None, :] <= qp_blk[:, None])
+            if window > 0:
+                valid = valid & (kp_blk[None, :] > qp_blk[:, None] - window)
+            s = jnp.where(valid[None, None, None], s, NEG_INF)
+            m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_cur[..., None])
+            alpha = jnp.exp(m_prev - m_cur)
+            l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p.astype(cdt), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_cur, l_cur, acc), None
+
+        init = (jnp.full((b, kv, rep, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, kv, rep, q_chunk), jnp.float32),
+                jnp.zeros((b, kv, rep, q_chunk, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(body, init, (kg_s, vg_s, kp))
+        return acc / jnp.maximum(l, 1e-30)[..., None]   # (B,KV,rep,qc,hd)
+
+    out = jax.lax.map(one_q, (jnp.moveaxis(qg, 3, 0), qp))
+    # (n_q, B, KV, rep, qc, hd) -> (B, Sq', H, hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq + qpad, h, hd)
+    out = out[:, :sq]
+    return out.astype(q.dtype)
+
+
+def _project_qkv(params: dict, x: jnp.ndarray, cfg, mode: ComputeMode):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = mode_dot(x, params["wq"].reshape(cfg.d_model, h * hd), mode)
+    k = mode_dot(x, params["wk"].reshape(cfg.d_model, kv * hd), mode)
+    v = mode_dot(x, params["wv"].reshape(cfg.d_model, kv * hd), mode)
+    if cfg.qkv_bias:
+        q = q + params["bq"].reshape(-1).astype(q.dtype)
+        k = k + params["bk"].reshape(-1).astype(k.dtype)
+        v = v + params["bv"].reshape(-1).astype(v.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, params["knorm"], cfg.norm_eps)
+    return q, k, v
+
+
+def self_attention(params: dict, x: jnp.ndarray, cfg, *,
+                   positions: jnp.ndarray,
+                   causal: bool = True, window: int = 0,
+                   cache: Optional[KVCache] = None,
+                   cache_pos: Optional[jnp.ndarray] = None,
+                   return_cache: bool = False,
+                   mode: ComputeMode = ComputeMode.RELAXED):
+    """Self-attention for train (cache=None), prefill (return_cache=True) and
+    decode (cache given; x is the single new token, cache_pos its position).
+
+    Returns (out, new_cache_or_None).
+    """
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    n_rep = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    q, k, v = _project_qkv(params, x, cfg, mode)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain_heads(q)
+    k = constrain_heads(k)
+    v = constrain_heads(v)
+
+    b, s = x.shape[0], x.shape[1]
+    new_cache = None
+    if cache is not None:
+        # decode: write the new K/V at cache_pos (mod capacity: ring for SWA)
+        cap = cache.capacity
+        slot = cache_pos % cap
+        kf = k.reshape(b, s, kv * hd).astype(cache.k.dtype)
+        vf = v.reshape(b, s, kv * hd).astype(cache.v.dtype)
+        ck = jax.lax.dynamic_update_slice(cache.k, kf, (0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, vf, (0, slot, 0))
+        new_cache = KVCache(ck, cv)
+        # absolute positions of cache slots (ring-aware)
+        idx = jnp.arange(cap)
+        wraps = cache_pos // cap
+        pos_abs = jnp.where(idx <= slot, wraps * cap + idx,
+                            (wraps - 1) * cap + idx)
+        k_pos = jnp.where(pos_abs <= cache_pos, pos_abs, -1)     # unwritten slots
+        ck4 = ck.reshape(b, cap, kv, hd)
+        cv4 = cv.reshape(b, cap, kv, hd)
+        out = _chunk_attn(q, ck4, cv4,
+                          q_pos=positions, k_pos=k_pos,
+                          causal=causal, window=window, logit_cap=cfg.attn_logit_softcap,
+                          scale=scale)
+    else:
+        out = _chunk_attn(q, k, v, q_pos=positions, k_pos=positions,
+                          causal=causal, window=window,
+                          logit_cap=cfg.attn_logit_softcap, scale=scale)
+        if return_cache:
+            # cache dtype follows the mode (C4: IMPRECISE => bf16 KV cache)
+            new_cache = KVCache(
+                k.reshape(b, s, kv * hd).astype(mode.operand_dtype),
+                v.reshape(b, s, kv * hd).astype(mode.operand_dtype))
+
+    b, s = x.shape[0], x.shape[1]
+    out = constrain_heads(out)
+    out = mode_dot(out.reshape(b, s, h * hd),
+                   params["wo"].reshape(h * hd, cfg.d_model), mode)
+    out = constrain(out, BATCH, None, None)
+    return out, new_cache
+
+
+def cross_attention(params: dict, x: jnp.ndarray, kv_src: jnp.ndarray, cfg, *,
+                    mode: ComputeMode = ComputeMode.RELAXED,
+                    precomputed_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
+    """Cross-attention to encoder / image tokens (no mask, no rope).
+
+    kv_src: (B, S_enc, d) or None if precomputed_kv given.
+    """
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    n_rep = h // kvh
+    b, s, _ = x.shape
+    scale = 1.0 / math.sqrt(hd)
+    q = mode_dot(x, params["wq"].reshape(cfg.d_model, h * hd), mode).reshape(b, s, h, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["qnorm"], cfg.norm_eps)
+    if precomputed_kv is not None:
+        kf, vf = precomputed_kv                        # fused (B, Se, KV*hd)
+        se = kf.shape[1]
+        k = kf.reshape(b, se, kvh, hd)
+        v = vf.reshape(b, se, kvh, hd)
+    else:
+        se = kv_src.shape[1]
+        k = mode_dot(kv_src, params["wk"].reshape(cfg.d_model, kvh * hd), mode) \
+            .reshape(b, se, kvh, hd)
+        v = mode_dot(kv_src, params["wv"].reshape(cfg.d_model, kvh * hd), mode) \
+            .reshape(b, se, kvh, hd)
+        if cfg.qk_norm:
+            k = rms_norm(k, params["knorm"], cfg.norm_eps)
+    out = _chunk_attn(q, k, v,
+                      q_pos=jnp.zeros((s,), jnp.int32),
+                      k_pos=jnp.zeros((se,), jnp.int32),
+                      causal=False, window=0,
+                      logit_cap=cfg.attn_logit_softcap, scale=scale)
+    out = mode_dot(out.reshape(b, s, h * hd),
+                   params["wo"].reshape(h * hd, cfg.d_model), mode)
+    return out, (k.reshape(b, se, kvh * hd), v.reshape(b, se, kvh * hd))

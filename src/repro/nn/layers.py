@@ -1,0 +1,69 @@
+"""Shared transformer building blocks: norms, rope, embeddings, MLP.
+
+Everything is functional (params are plain dicts of arrays) so stacks can be
+scanned and shardings attached externally.  Matmuls go through the
+Cappuccino mode machinery (C4): ``mode`` threads the per-layer precision
+policy into every projection.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.precision import ComputeMode, mode_dot
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs       # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over the heads axis: (..., S, 1, half)
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap <= 0:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+def mlp(params: dict, x: jnp.ndarray, *, activation: str = "silu",
+        mode: ComputeMode = ComputeMode.RELAXED) -> jnp.ndarray:
+    """Gated MLP (SwiGLU / GeGLU) or plain 2-layer when no gate weight."""
+    from .sharding import BATCH, constrain
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    if "wg" in params:
+        h = act(mode_dot(x, params["wg"], mode)) * mode_dot(x, params["wu"], mode)
+    else:
+        h = act(mode_dot(x, params["wu"], mode))
+    h = constrain(h, BATCH, None, "model")      # hidden sharded over d_ff
+    return mode_dot(h, params["wd"], mode)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jnp.ndarray, table_or_head: jnp.ndarray, *, tied: bool,
+            final_cap: float = 0.0,
+            mode: ComputeMode = ComputeMode.RELAXED) -> jnp.ndarray:
+    w = table_or_head.T if tied else table_or_head
+    logits = mode_dot(x, w, ComputeMode.RELAXED if mode is not ComputeMode.PRECISE
+                      else mode).astype(jnp.float32)
+    return softcap(logits, final_cap)

@@ -1,0 +1,620 @@
+"""Model assembly: params, forward (train), prefill, and decode for every
+architecture family in the assigned pool.
+
+The layer stack is executed as a ``lax.scan`` over *pattern periods*
+(cfg.block_pattern), so heterogeneous stacks — gemma2's local/global
+alternation, xlstm's mLSTM/sLSTM mix, llama-vision's every-5th cross-attn —
+lower to one compact scanned HLO with stacked (G, ...) parameters.  This is
+what keeps the 94-layer MoE and 100-layer VLM dry-runs compilable.
+
+Params are plain nested dicts of arrays; ``param_axes`` returns the same
+structure with logical-axis tuples for sharding.py.  ``abstract_params``
+gives ShapeDtypeStructs (no allocation) for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.precision import ComputeMode, mode_dot
+from .attention import KVCache, cross_attention, self_attention
+from .config import ModelConfig
+from .layers import embed, mlp, rms_norm, unembed
+from .moe import moe_ffn
+from .sharding import BATCH, constrain
+from .ssm import SSMState, mamba_mixer
+from .xlstm import MLSTMState, SLSTMState, mlstm_block, slstm_block
+
+# ---------------------------------------------------------------------------
+# Parameter definitions: nested dict of (shape, logical_axes, fan_in)
+# ---------------------------------------------------------------------------
+
+Def = Tuple[Tuple[int, ...], Tuple[Optional[str], ...], int]
+
+
+def _attn_defs(cfg: ModelConfig) -> Dict[str, Def]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    p: Dict[str, Def] = {
+        "wq": ((d, h * hd), ("embed", "heads"), d),
+        "wk": ((d, kv * hd), ("embed", "kv"), d),
+        "wv": ((d, kv * hd), ("embed", "kv"), d),
+        "wo": ((h * hd, d), ("heads", "embed"), h * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ((h * hd,), ("heads",), 0)
+        p["bk"] = ((kv * hd,), ("kv",), 0)
+        p["bv"] = ((kv * hd,), ("kv",), 0)
+    if cfg.qk_norm:
+        p["qnorm"] = ((hd,), (None,), 0)
+        p["knorm"] = ((hd,), (None,), 0)
+    return p
+
+
+def _mlp_defs(cfg: ModelConfig) -> Dict[str, Def]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"wg": ((d, f), ("embed", "mlp"), d),
+            "wu": ((d, f), ("embed", "mlp"), d),
+            "wd": ((f, d), ("mlp", "embed"), f)}
+
+
+def _moe_defs(cfg: ModelConfig) -> Dict[str, Def]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    return {"router": ((d, e), ("embed", None), d),
+            "wg": ((e, d, f), ("experts", "embed", None), d),
+            "wu": ((e, d, f), ("experts", "embed", None), d),
+            "wd": ((e, f, d), ("experts", None, "embed"), f)}
+
+
+def _mamba_defs(cfg: ModelConfig) -> Dict[str, Def]:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    n, cw = cfg.ssm.state_dim, cfg.ssm.conv_width
+    return {"w_in": ((d, 2 * di), ("embed", "inner"), d),
+            "conv_w": ((cw, di), (None, "inner"), 0),
+            "w_dt": ((di, di), ("inner", None), di),
+            "dt_bias": ((di,), ("inner",), 0),
+            "A_log": ((di, n), ("inner", "state"), 0),
+            "w_B": ((di, n), ("inner", "state"), di),
+            "w_C": ((di, n), ("inner", "state"), di),
+            "D": ((di,), ("inner",), 0),
+            "w_out": ((di, d), ("inner", "embed"), di)}
+
+
+def _mlstm_defs(cfg: ModelConfig) -> Dict[str, Def]:
+    d, h = cfg.d_model, cfg.num_heads
+    di = 2 * d
+    hd = di // h
+    return {"w_in": ((d, 2 * di), ("embed", "inner"), d),
+            "conv_w": ((4, di), (None, "inner"), 0),
+            "wq": ((di, di), (None, "inner"), di),
+            "wk": ((di, di), (None, "inner"), di),
+            "wv": ((di, di), (None, "inner"), di),
+            "w_i": ((di, h), (None, None), di),
+            "w_f": ((di, h), (None, None), di),
+            "cell_norm": ((hd,), (None,), 0),
+            "w_out": ((di, d), ("inner", "embed"), di)}
+
+
+def _slstm_defs(cfg: ModelConfig) -> Dict[str, Def]:
+    d = cfg.d_model
+    f43 = max((4 * d // 3 + 127) // 128 * 128, 128)
+    return {"w_gates": ((d, 4 * d), ("embed", "inner"), d),
+            "r_gates": ((4, d), (None, "inner"), 0),
+            "cell_norm": ((d,), (None,), 0),
+            "w_ff_g": ((d, f43), ("embed", "mlp"), d),
+            "w_ff_u": ((d, f43), ("embed", "mlp"), d),
+            "w_ff_d": ((f43, d), ("mlp", "embed"), f43)}
+
+
+def _block_defs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    norm = lambda: ((d,), (None,), 0)
+    p: Dict[str, Any] = {"ln1": norm()}
+    if kind in ("attn", "attn_local", "attn_global", "cross", "hybrid"):
+        p.update(_attn_defs(cfg))
+        if kind == "cross":
+            p["lnx"] = norm()
+            p["cross"] = _attn_defs(cfg)
+        if kind == "hybrid":
+            p["mamba"] = _mamba_defs(cfg)
+        if cfg.sandwich_norm:
+            p["ln1_post"] = norm()
+        if not cfg.parallel_block:
+            p["ln2"] = norm()
+            if cfg.sandwich_norm:
+                p["ln2_post"] = norm()
+        if cfg.moe is not None:
+            p.update(_moe_defs(cfg))
+        elif cfg.d_ff > 0:
+            p.update(_mlp_defs(cfg))
+    elif kind == "mlstm":
+        p.update(_mlstm_defs(cfg))
+    elif kind == "slstm":
+        p.update(_slstm_defs(cfg))
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    defs: Dict[str, Any] = {
+        "embed": ((v, d), ("vocab", "embed"), d),
+        "final_norm": ((d,), (None,), 0),
+        "blocks": tuple(_block_defs(cfg, k) for k in cfg.block_pattern),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ((d, v), ("embed", "vocab"), d)
+    if cfg.is_encoder_decoder:
+        defs["enc_blocks"] = (_block_defs(cfg, "attn"),)
+        defs["enc_final_norm"] = ((d,), (None,), 0)
+    return defs
+
+
+def _is_def(x) -> bool:
+    return (isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple))
+
+
+def _map_defs(fn, defs, stacked_paths=("blocks", "enc_blocks"), cfg=None):
+    """Apply fn(def, stack_count) over the def tree; block defs get a
+    leading stacking axis."""
+    out = {}
+    for name, sub in defs.items():
+        if name == "blocks":
+            g = cfg.num_groups
+            out[name] = tuple(
+                jax.tree.map(lambda d: fn(d, g), blk, is_leaf=_is_def)
+                for blk in sub)
+        elif name == "enc_blocks":
+            g = cfg.encoder_layers
+            out[name] = tuple(
+                jax.tree.map(lambda d: fn(d, g), blk, is_leaf=_is_def)
+                for blk in sub)
+        else:
+            out[name] = fn(sub, 0)
+    return out
+
+
+def param_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    """Same structure as params; leaves are logical-axes tuples."""
+    def fn(d, g):
+        _, axes, _ = d
+        return (("layers",) + axes) if g else axes
+    return _map_defs(fn, param_defs(cfg), cfg=cfg)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree — zero allocation, for .lower() dry-runs."""
+    def fn(d, g):
+        shape, _, _ = d
+        full = ((g,) + shape) if g else shape
+        return jax.ShapeDtypeStruct(full, dtype)
+    return _map_defs(fn, param_defs(cfg), cfg=cfg)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype=jnp.float32) -> Dict[str, Any]:
+    defs = param_defs(cfg)
+    flat, treedef = jax.tree.flatten(
+        _map_defs(lambda d, g: (d, g), defs, cfg=cfg),
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2 and _is_def(x[0]))
+    keys = jax.random.split(key, len(flat))
+    leaves = []
+    for k, ((shape, _, fan_in), g) in zip(keys, flat):
+        full = ((g,) + shape) if g else shape
+        if fan_in == 0:
+            init = jnp.zeros(full, dtype)
+        else:
+            init = (jax.random.normal(k, full, dtype)
+                    * (1.0 / math.sqrt(fan_in))).astype(dtype)
+        leaves.append(init)
+    params = jax.tree.unflatten(treedef, leaves)
+    # A_log must start positive (decay in (0,1)); conv taps ~ small identity
+    def fix(blk):
+        if "mamba" in blk:
+            blk["mamba"]["A_log"] = jnp.log(
+                jnp.broadcast_to(jnp.arange(1, cfg.ssm.state_dim + 1, dtype=dtype),
+                                 blk["mamba"]["A_log"].shape))
+            blk["mamba"]["conv_w"] = blk["mamba"]["conv_w"].at[..., -1, :].set(1.0)
+            blk["mamba"]["dt_bias"] = blk["mamba"]["dt_bias"] + 0.1
+        if "conv_w" in blk:
+            blk["conv_w"] = blk["conv_w"].at[..., -1, :].set(1.0)
+        return blk
+    params["blocks"] = tuple(fix(dict(b)) for b in params["blocks"])
+    return params
+
+
+def num_params(cfg: ModelConfig) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(abstract_params(cfg)):
+        total += math.prod(leaf.shape)
+    return total
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Active per-token params (MoE counts top_k of num_experts)."""
+    total = num_params(cfg)
+    if cfg.moe is None:
+        return total
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    expert_leaf = 0
+    for blk in abstract_params(cfg)["blocks"]:
+        for name in ("wg", "wu", "wd"):
+            if name in blk and blk[name].ndim == 4:   # (G, E, ., .)
+                expert_leaf += math.prod(blk[name].shape)
+    return total - expert_leaf + int(expert_leaf * k / e)
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _remat(cfg: ModelConfig):
+    """Layer-body checkpoint wrapper honoring cfg.remat_policy."""
+    if cfg.remat_policy == "dots":
+        return partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint
+
+
+class Ctx(NamedTuple):
+    positions: jnp.ndarray            # (S,) absolute positions of x tokens
+    mode: ComputeMode
+    aux_kv: Optional[jnp.ndarray]     # encoder output / image embeds (B,Se,d)
+    window_override: int              # >0: force window on full-attn layers
+    cache_pos: Optional[jnp.ndarray]  # decode position scalar
+
+
+def _resolve_window(cfg: ModelConfig, kind: str, ctx: Ctx) -> int:
+    if kind == "attn_local" or kind == "hybrid":
+        return cfg.sliding_window
+    if ctx.window_override > 0:
+        return ctx.window_override
+    return 0
+
+
+def _ffn(p: dict, h: jnp.ndarray, cfg: ModelConfig, mode: ComputeMode):
+    if cfg.moe is not None:
+        return moe_ffn(p, h, cfg, mode=mode)
+    return mlp(p, h, activation=cfg.ffn_activation, mode=mode)
+
+
+def apply_block(kind: str, p: dict, x: jnp.ndarray, cfg: ModelConfig,
+                ctx: Ctx, cache=None, return_cache: bool = False):
+    """Returns (x, new_cache).  cache semantics per kind documented in
+    init_cache()."""
+    mode = ctx.mode
+    # keep the residual stream sharded through scan bodies (batch over
+    # data axes); without this XLA SPMD may replicate layer activations
+    x = constrain(x, BATCH, None, None)
+    if kind in ("attn", "attn_local", "attn_global", "cross", "hybrid"):
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        window = _resolve_window(cfg, kind, ctx)
+        attn_cache = cache[0] if (cache is not None and kind == "hybrid") else \
+            (cache[0] if (cache is not None and kind == "cross") else cache)
+        attn_out, new_kv = self_attention(
+            p, h, cfg, positions=ctx.positions, causal=True, window=window,
+            cache=attn_cache, cache_pos=ctx.cache_pos,
+            return_cache=return_cache, mode=mode)
+        if cfg.sandwich_norm:
+            attn_out = rms_norm(attn_out, p["ln1_post"], cfg.norm_eps)
+
+        new_cache = None
+        if kind == "hybrid":
+            ssm_state = cache[1] if cache is not None else None
+            if return_cache or cache is not None:
+                m_out, new_ssm = mamba_mixer(p["mamba"], h, cfg,
+                                             state=ssm_state,
+                                             return_state=True, mode=mode)
+                new_cache = (new_kv, new_ssm)
+            else:
+                m_out = mamba_mixer(p["mamba"], h, cfg, mode=mode)
+            attn_out = 0.5 * (attn_out + m_out)
+        elif kind == "cross":
+            x_mid = x + attn_out
+            hx = rms_norm(x_mid, p["lnx"], cfg.norm_eps)
+            pre_kv = cache[1] if cache is not None else None
+            c_out, ckv = cross_attention(p["cross"], hx, ctx.aux_kv, cfg,
+                                         mode=mode, precomputed_kv=pre_kv)
+            new_cache = (new_kv, ckv) if (return_cache or cache is not None) else None
+            x = x_mid + c_out
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            f = _ffn(p, h2, cfg, mode)
+            if cfg.sandwich_norm:
+                f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+            return x + f, new_cache
+        else:
+            new_cache = new_kv
+
+        if cfg.parallel_block:
+            f = _ffn(p, h, cfg, mode)
+            return x + attn_out + f, new_cache
+        x = x + attn_out
+        if cfg.d_ff > 0 or cfg.moe is not None:
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            f = _ffn(p, h2, cfg, mode)
+            if cfg.sandwich_norm:
+                f = rms_norm(f, p["ln2_post"], cfg.norm_eps)
+            x = x + f
+        return x, new_cache
+
+    if kind == "mlstm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if return_cache or cache is not None:
+            out, st = mlstm_block(p, h, cfg, state=cache, return_state=True,
+                                  mode=mode)
+            return x + out, st
+        return x + mlstm_block(p, h, cfg, mode=mode), None
+
+    if kind == "slstm":
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if return_cache or cache is not None:
+            out, st = slstm_block(p, h, cfg, state=cache, return_state=True,
+                                  mode=mode)
+            return x + out, st
+        return x + slstm_block(p, h, cfg, mode=mode), None
+
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model entry points
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params, tokens, cfg, mode):
+    x = embed(params["embed"], tokens).astype(mode.operand_dtype)
+    if cfg.scale_embed:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    return x
+
+
+def encode(params, frames: jnp.ndarray, cfg: ModelConfig,
+           mode: ComputeMode = ComputeMode.RELAXED) -> jnp.ndarray:
+    """Whisper-style encoder over stubbed frame embeddings (B, Se, d)."""
+    x = frames.astype(mode.operand_dtype)
+    se = x.shape[1]
+    ctx = Ctx(positions=jnp.arange(se), mode=mode, aux_kv=None,
+              window_override=0, cache_pos=None)
+
+    def body(xc, gp):
+        h = rms_norm(xc, gp[0]["ln1"], cfg.norm_eps)
+        out, _ = self_attention(gp[0], h, cfg, positions=ctx.positions,
+                                causal=False, window=0, mode=mode)
+        xc = xc + out
+        h2 = rms_norm(xc, gp[0]["ln2"], cfg.norm_eps)
+        return xc + mlp(gp[0], h2, activation=cfg.ffn_activation, mode=mode), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ModelConfig, *,
+            aux: Optional[jnp.ndarray] = None,
+            mode: ComputeMode = ComputeMode.RELAXED,
+            window_override: int = 0,
+            remat: bool = True) -> jnp.ndarray:
+    """Training/eval forward: (B, S) tokens -> (B, S, V) logits.
+
+    aux: encoder frames (audio) or image embeddings (vlm), already (B,Se,d).
+    """
+    b, s = tokens.shape
+    aux_kv = None
+    if cfg.is_encoder_decoder:
+        aux_kv = encode(params, aux, cfg, mode)
+    elif cfg.num_image_tokens:
+        aux_kv = aux.astype(mode.operand_dtype)
+
+    x = _embed_tokens(params, tokens, cfg, mode)
+    ctx = Ctx(positions=jnp.arange(s), mode=mode, aux_kv=aux_kv,
+              window_override=window_override, cache_pos=None)
+
+    def body(xc, gp):
+        for i, kind in enumerate(cfg.block_pattern):
+            xc, _ = apply_block(kind, gp[i], xc, cfg, ctx)
+        return xc, None
+
+    body_fn = _remat(cfg)(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(x, head, tied=cfg.tie_embeddings,
+                   final_cap=cfg.final_logit_softcap, mode=mode)
+
+
+def loss_fn(params, tokens, labels, cfg: ModelConfig, *,
+            aux: Optional[jnp.ndarray] = None,
+            mode: ComputeMode = ComputeMode.RELAXED,
+            chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy with sequence-chunked logits (never materializes the
+    full (B, S, V) tensor — essential at vocab 256k x seq 4k)."""
+    b, s = tokens.shape
+    aux_kv = None
+    if cfg.is_encoder_decoder:
+        aux_kv = encode(params, aux, cfg, mode)
+    elif cfg.num_image_tokens:
+        aux_kv = aux.astype(mode.operand_dtype)
+    x = _embed_tokens(params, tokens, cfg, mode)
+    ctx = Ctx(positions=jnp.arange(s), mode=mode, aux_kv=aux_kv,
+              window_override=0, cache_pos=None)
+
+    def body(xc, gp):
+        for i, kind in enumerate(cfg.block_pattern):
+            xc, _ = apply_block(kind, gp[i], xc, cfg, ctx)
+        return xc, None
+
+    x, _ = jax.lax.scan(_remat(cfg)(body), x, params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n_c = x.shape[1] // chunk
+    xs = (x.reshape(b, n_c, chunk, -1).transpose(1, 0, 2, 3),
+          labels.reshape(b, n_c, chunk).transpose(1, 0, 2))
+
+    @jax.checkpoint
+    def chunk_loss(carry, xs_c):
+        xc, lc = xs_c
+        logits = unembed(xc, head, tied=cfg.tie_embeddings,
+                         final_cap=cfg.final_logit_softcap, mode=mode)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(lc, 0)[..., None],
+                                   axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        nll = (logz - gold) * valid
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk_loss, (jnp.float32(0), jnp.float32(0)), xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _cache_capacity(cfg: ModelConfig, kind: str, seq_len: int,
+                    window_override: int) -> int:
+    w = _resolve_window(cfg, kind, Ctx(None, None, None, window_override, None))
+    return min(seq_len, w) if w > 0 else seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, *,
+               window_override: int = 0, dtype=jnp.bfloat16,
+               abstract: bool = False):
+    """Zero (or abstract) decode cache for a context of ``seq_len``.
+
+    Structure: tuple over pattern positions; each leaf stacked (G, ...).
+    """
+    kv_heads, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_groups
+    mk = (lambda shape, dt=dtype: jax.ShapeDtypeStruct(shape, dt)) if abstract \
+        else (lambda shape, dt=dtype: jnp.zeros(shape, dt))
+
+    def kv(kind):
+        cap = _cache_capacity(cfg, kind, seq_len, window_override)
+        return KVCache(k=mk((g, batch, cap, kv_heads * hd)),
+                       v=mk((g, batch, cap, kv_heads * hd)))
+
+    caches = []
+    for kind in cfg.block_pattern:
+        if kind in ("attn", "attn_local", "attn_global"):
+            caches.append(kv(kind))
+        elif kind == "cross":
+            se = cfg.encoder_seq or cfg.num_image_tokens
+            caches.append((kv(kind),
+                           (mk((g, batch, se, kv_heads * hd)),
+                            mk((g, batch, se, kv_heads * hd)))))
+        elif kind == "hybrid":
+            di = cfg.ssm.expand * cfg.d_model
+            n, cw = cfg.ssm.state_dim, cfg.ssm.conv_width
+            caches.append((kv(kind),
+                           SSMState(h=mk((g, batch, di, n), jnp.float32),
+                                    conv=mk((g, batch, cw - 1, di)))))
+        elif kind == "mlstm":
+            di = 2 * cfg.d_model
+            h = cfg.num_heads
+            hdm = di // h
+            caches.append(MLSTMState(
+                c=mk((g, batch, h, hdm, hdm), jnp.float32),
+                n=mk((g, batch, h, hdm), jnp.float32),
+                m=mk((g, batch, h), jnp.float32),
+                conv=mk((g, batch, 3, di))))
+        elif kind == "slstm":
+            d = cfg.d_model
+            caches.append(SLSTMState(c=mk((g, batch, d), jnp.float32),
+                                     n=mk((g, batch, d), jnp.float32),
+                                     h=mk((g, batch, d), jnp.float32),
+                                     m=mk((g, batch, d), jnp.float32)))
+        else:
+            raise ValueError(kind)
+    return tuple(caches)
+
+
+def decode_step(params, caches, token: jnp.ndarray, pos: jnp.ndarray,
+                cfg: ModelConfig, *,
+                mode: ComputeMode = ComputeMode.RELAXED,
+                window_override: int = 0):
+    """One serving step: (B, 1) token at position ``pos`` -> (B, V) logits,
+    updated caches.  Cache layout from init_cache/prefill."""
+    b = token.shape[0]
+    x = _embed_tokens(params, token, cfg, mode)
+    positions = jnp.full((1,), pos, jnp.int32)
+    ctx = Ctx(positions=positions, mode=mode, aux_kv=None,
+              window_override=window_override, cache_pos=pos)
+
+    def body(xc, gp_and_cache):
+        gp, gc = gp_and_cache
+        new_gc = []
+        for i, kind in enumerate(cfg.block_pattern):
+            xc, nc = apply_block(kind, gp[i], xc, cfg, ctx, cache=gc[i])
+            new_gc.append(nc)
+        return xc, tuple(new_gc)
+
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head, tied=cfg.tie_embeddings,
+                     final_cap=cfg.final_logit_softcap, mode=mode)
+    return logits[:, 0], new_caches
+
+
+def prefill(params, tokens: jnp.ndarray, cfg: ModelConfig, *,
+            capacity: Optional[int] = None,
+            aux: Optional[jnp.ndarray] = None,
+            mode: ComputeMode = ComputeMode.RELAXED,
+            window_override: int = 0):
+    """Process the prompt, returning (last-token logits, decode caches).
+
+    capacity: cache size to allocate (>= S); defaults to S.
+    """
+    b, s = tokens.shape
+    capacity = capacity or s
+    assert capacity >= s, "prefill longer than cache capacity"
+    aux_kv = None
+    if cfg.is_encoder_decoder:
+        aux_kv = encode(params, aux, cfg, mode)
+    elif cfg.num_image_tokens:
+        aux_kv = aux.astype(mode.operand_dtype)
+
+    x = _embed_tokens(params, tokens, cfg, mode)
+    ctx = Ctx(positions=jnp.arange(s), mode=mode, aux_kv=aux_kv,
+              window_override=window_override, cache_pos=None)
+
+    def expand_kv(kvc: KVCache, kind: str):
+        cap = _cache_capacity(cfg, kind, capacity, window_override)
+        if cap >= s:
+            padded = jax.tree.map(
+                lambda a: jnp.pad(a, ((0, 0), (0, cap - s), (0, 0))), kvc)
+            return padded
+        # ring layout: keep last `cap` tokens at slots pos % cap
+        tail = jax.tree.map(lambda a: a[:, -cap:], kvc)
+        shift = s % cap
+        return jax.tree.map(lambda a: jnp.roll(a, shift, axis=1), tail)
+
+    def body(xc, gp):
+        new_gc = []
+        for i, kind in enumerate(cfg.block_pattern):
+            xc, nc = apply_block(kind, gp[i], xc, cfg, ctx, return_cache=True)
+            if kind in ("attn", "attn_local", "attn_global"):
+                nc = expand_kv(nc, kind)
+            elif kind == "hybrid":
+                nc = (expand_kv(nc[0], kind), nc[1])
+            elif kind == "cross":
+                kvp, ckv = nc
+                nc = (expand_kv(kvp, kind), ckv)
+            new_gc.append(nc)
+        return xc, tuple(new_gc)
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head, tied=cfg.tie_embeddings,
+                     final_cap=cfg.final_logit_softcap, mode=mode)
+    return logits[:, 0], caches

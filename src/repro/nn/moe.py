@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded grouped GEMM.
+
+Dispatch is scatter-based (tokens sorted into per-expert buffers by a
+cumulative-position assignment), then experts run as one batched einsum
+("ecd,edf->ecf" — a grouped GEMM the MXU executes densely), then results
+gather back weighted by router probabilities.  This is the OLP discipline
+(C1) applied to experts: each expert shard fully owns its experts' outputs;
+the only cross-shard movement is the token dispatch/return, and capacity
+bounds make every shape static (dry-run/AOT friendly).
+
+Sharding intent (attached in sharding.py): experts on the "model" axis,
+tokens on "data"; XLA SPMD inserts the all-to-all pair.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.precision import ComputeMode, mode_dot
+
+
+def route(router_w: jnp.ndarray, x: jnp.ndarray, num_experts: int, top_k: int,
+          mode: ComputeMode) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (top_probs (T,k), top_idx (T,k), router_probs (T,E))."""
+    logits = mode_dot(x, router_w, ComputeMode.PRECISE).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, top_k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    return top_p, top_i, probs
+
+
+def load_balance_loss(router_probs: jnp.ndarray, top_idx: jnp.ndarray,
+                      num_experts: int) -> jnp.ndarray:
+    """Switch-Transformer aux loss: E * sum_e f_e * P_e."""
+    t = router_probs.shape[0]
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_idx[:, 0], num_experts, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(router_probs, axis=0)
+    return num_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+def moe_ffn(params: dict, x: jnp.ndarray, cfg, *,
+            mode: ComputeMode = ComputeMode.RELAXED,
+            return_aux: bool = False):
+    """x: (B, S, d) -> (B, S, d).  params: router (d, E), wg/wu (E, d, f),
+    wd (E, f, d)."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    top_p, top_i, router_probs = route(params["router"], xf,
+                                       moe.num_experts, moe.top_k, mode)
+
+    e, k = moe.num_experts, moe.top_k
+    if s == 1:
+        # decode: lossless capacity (t = batch is small; dropping a request's
+        # token at decode would corrupt generation)
+        capacity = t * k
+    else:
+        capacity = max(int(t * k * moe.capacity_factor / e), 1)
+
+    # assignment slots: position of each (token, choice) within its expert
+    e_flat = top_i.reshape(-1)                                   # (T*k,)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)          # (T*k, E)
+    slot = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=-1)
+    keep = slot < capacity                                       # dropped beyond cap
+    slot_c = jnp.clip(slot, 0, capacity - 1)
+
+    # scatter tokens into per-expert buffers (E, C, d), experts sharded
+    from .sharding import constrain
+    x_rep = jnp.repeat(xf, k, axis=0)                            # (T*k, d)
+    contrib = jnp.where(keep[:, None], x_rep, 0).astype(mode.operand_dtype)
+    buf = jnp.zeros((e, capacity, d), mode.operand_dtype)
+    buf = buf.at[e_flat, slot_c].add(contrib, mode="drop")
+    e_ax = "model" if moe.expert_parallel else None
+    buf = constrain(buf, e_ax, None, None)
+
+    # grouped GEMM across experts (gated MLP per expert)
+    act = jax.nn.silu if cfg.ffn_activation == "silu" else jax.nn.gelu
+    wg = params["wg"].astype(mode.operand_dtype)
+    wu = params["wu"].astype(mode.operand_dtype)
+    wd = params["wd"].astype(mode.operand_dtype)
+    hg = jnp.einsum("ecd,edf->ecf", buf, wg,
+                    preferred_element_type=mode.accum_dtype)
+    hu = jnp.einsum("ecd,edf->ecf", buf, wu,
+                    preferred_element_type=mode.accum_dtype)
+    hout = (act(hg) * hu).astype(mode.operand_dtype)
+    hout = constrain(hout, e_ax, None, None)
+    yb = jnp.einsum("ecf,efd->ecd", hout, wd,
+                    preferred_element_type=mode.accum_dtype)     # (E, C, d)
+    yb = constrain(yb, e_ax, None, None)
+
+    # gather back, weighted by router probs
+    y_tok = yb[e_flat, slot_c]                                   # (T*k, d)
+    w_tok = (top_p.reshape(-1) * keep.astype(jnp.float32))[:, None]
+    y = jnp.sum((y_tok.astype(jnp.float32) * w_tok).reshape(t, k, d), axis=1)
+    y = y.reshape(b, s, d).astype(mode.out_dtype)
+    if return_aux:
+        return y, load_balance_loss(router_probs, top_i, e)
+    return y

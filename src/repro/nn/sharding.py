@@ -1,0 +1,146 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, condensed).
+
+Every parameter leaf carries a tuple of *logical* axis names (recorded at
+definition time in model.py).  A rule table maps logical names to mesh axes
+per execution mode:
+
+  train:     FSDP on "data" (embed dim) x tensor-parallel on "model"
+             (heads / ffn / experts / vocab) — optimizer state shards the
+             same way, so AdamW fits for the 104B configs.
+  inference: tensor-parallel on "model", weights replicated across "data"
+             (weight-stationary serving); huge models opt into 2-D weight
+             sharding via cfg.shard_weights_2d_infer.
+
+This is contribution C1 generalized (DESIGN.md §4): shard the *output*
+dimensions of each projection; reductions stay shard-local until a single
+collective.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Active-mesh context: model code emits sharding constraints only when a
+# launcher has activated a mesh (CPU unit tests run unconstrained).
+# Constraints are what keep lax.scan carries and attention working sets
+# sharded — without them XLA SPMD may replicate the layer-body activations,
+# which the dry-run exposed as TB-scale per-device temp allocations.
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_active_mesh", default=None)
+
+
+@contextlib.contextmanager
+def activate_mesh(mesh: Mesh):
+    token = _ACTIVE_MESH.set(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE_MESH.reset(token)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH.get()
+
+
+#: logical batch marker used in constraint specs
+BATCH = ("pod", "data")
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint honoring divisibility; no-op without an
+    active mesh.  ``axes`` entries: None, "model", or BATCH (the batch
+    marker, resolved to whichever of pod/data exist and divide)."""
+    mesh = active_mesh()
+    if mesh is None or x is None:
+        return x
+    parts = []
+    for dim, ax in zip(x.shape, axes):
+        if ax is None:
+            parts.append(None)
+            continue
+        cand = tuple(a for a in (ax if isinstance(ax, tuple) else (ax,))
+                     if a in mesh.axis_names)
+        size = math.prod(mesh.shape[a] for a in cand) if cand else 0
+        parts.append((cand if len(cand) > 1 else cand[0])
+                     if cand and dim % size == 0 and dim >= size else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))
+
+
+def constrain_heads(x):
+    """(B, S, H, hd): shard heads on 'model' when H divides; else shard the
+    head dim (hd always divides for the assigned pool: 64/128/256)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    msize = mesh.shape.get("model", 1)
+    h, hd = x.shape[-2], x.shape[-1]
+    if h % msize == 0 and h >= msize:
+        return constrain(x, BATCH, None, "model", None)
+    if hd % msize == 0:
+        return constrain(x, BATCH, None, None, "model")
+    return constrain(x, BATCH, None, None, None)
+
+# logical axis vocabulary used by model.py param defs
+#   layers   scan-stack axis (never sharded)
+#   vocab    vocabulary dim
+#   embed    d_model dim (FSDP'd in training)
+#   heads    fused H*hd projection dim
+#   kv       fused KV*hd projection dim
+#   mlp      d_ff dim
+#   experts  MoE expert dim
+#   inner    SSM / xLSTM expanded inner dim
+#   state    SSM state dim N, conv taps, gate count: tiny, never sharded
+
+
+def rules(mode: str, cfg) -> dict:
+    two_d = mode != "train" and getattr(cfg, "shard_weights_2d_infer", False)
+    fsdp = "data" if (mode == "train" or two_d) else None
+    moe = getattr(cfg, "moe", None)
+    expert_ax = "model" if (moe is None or moe.expert_parallel) else None
+    return {
+        "layers": None,
+        "vocab": "model",
+        "embed": fsdp,
+        "heads": "model",
+        "kv": "model",
+        "mlp": "model",
+        "experts": expert_ax,
+        "inner": "model",
+        "state": None,
+        None: None,
+    }
+
+
+def spec_for(axes: Tuple[Optional[str], ...], mode: str, cfg) -> P:
+    r = rules(mode, cfg)
+    return P(*(r[a] for a in axes))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes the global batch shards over: ('pod','data') when a pod axis
+    exists, else ('data',)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def data_spec(mesh: Mesh, *, batch_rank_pos: int = 0, ndim: int = 2) -> P:
+    """Sharding for a (B, ...) input batch: batch over pod+data."""
+    parts: list = [None] * ndim
+    parts[batch_rank_pos] = batch_axes(mesh)
+    return P(*parts)
+
+
+def shard_params_tree(axes_tree, mode: str, cfg):
+    """Map a pytree of logical-axes tuples to PartitionSpecs."""
+    return jax.tree.map(lambda axes: spec_for(axes, mode, cfg), axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(a is None or isinstance(a, str) for a in x))

@@ -1,0 +1,127 @@
+"""Mamba-style selective SSM (for the hymba hybrid blocks).
+
+Selective state space: per-channel state h (N-dim) with input-dependent
+gates::
+
+    h_t = exp(-dt_t * A) * h_{t-1} + dt_t * B_t * x_t
+    y_t = C_t . h_t + D * x_t
+
+Training/prefill parallelizes over time with an associative scan on the
+(decay, increment) pairs; decode carries (B, d_inner, N) state — O(1) per
+token, which is why hymba runs the long_500k shape natively.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.precision import ComputeMode, mode_dot
+
+
+class SSMState(NamedTuple):
+    h: jnp.ndarray             # (B, d_inner, N)
+    conv: jnp.ndarray          # (B, conv_width - 1, d_inner) rolling input tail
+
+
+def _ssm_scan(decay: jnp.ndarray, inc: jnp.ndarray,
+              h0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Parallel scan of h_t = decay_t * h_{t-1} + inc_t over axis 1 (time).
+
+    decay, inc: (B, S, d_inner, N).  Returns h for every t.
+    """
+    if h0 is not None:
+        inc = inc.at[:, 0].add(decay[:, 0] * h0)
+
+    def combine(a, b):
+        d1, i1 = a
+        d2, i2 = b
+        return d1 * d2, d2 * i1 + i2
+
+    _, h = jax.lax.associative_scan(combine, (decay, inc), axis=1)
+    return h
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, tail: Optional[jnp.ndarray]):
+    """Depthwise causal conv. x: (B,S,di); w: (cw, di); tail: (B,cw-1,di)."""
+    cw = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)            # (B, S+cw-1, di)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(cw))
+    new_tail = xp[:, -(cw - 1):] if cw > 1 else tail
+    return out, new_tail
+
+
+def mamba_mixer(params: dict, x: jnp.ndarray, cfg, *,
+                state: Optional[SSMState] = None,
+                return_state: bool = False,
+                mode: ComputeMode = ComputeMode.RELAXED):
+    """x: (B, S, d) -> (B, S, d).  state given => continue from it (decode).
+
+    params: w_in (d, 2*di), conv_w (cw, di), w_dt (di, di_rank->di simplified:
+    (di,)-bias + (d_rank)), A_log (di, N), w_B/w_C (di, N), D (di,),
+    w_out (di, d).
+    """
+    ssm = cfg.ssm
+    b, s, d = x.shape
+    di = ssm.expand * cfg.d_model
+    n = ssm.state_dim
+
+    xz = mode_dot(x, params["w_in"], mode)             # (B,S,2di)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin, new_tail = _causal_conv(xin, params["conv_w"].astype(xin.dtype),
+                                 state.conv if state is not None else None)
+    xin = jax.nn.silu(xin)
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))  # (di, N), negative
+    dt = jax.nn.softplus(
+        mode_dot(xin, params["w_dt"], mode).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32))       # (B,S,di)
+    bmat = mode_dot(xin, params["w_B"], mode).astype(jnp.float32)   # (B,S,N)
+    cmat = mode_dot(xin, params["w_C"], mode).astype(jnp.float32)   # (B,S,N)
+
+    h0 = state.h if state is not None else None
+    if s == 1:   # decode fast path: one recurrence step, no scan
+        decay = jnp.exp(dt[..., None] * a[None, None])              # (B,1,di,N)
+        inc = (dt * xin.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+        h_prev = h0 if h0 is not None else jnp.zeros((b, di, n), jnp.float32)
+        h_last = decay[:, 0] * h_prev + inc[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h_last, cmat[:, 0])[:, None]
+    else:
+        # time-chunked scan: materialize the (B, chunk, di, N) gate tensors
+        # one chunk at a time (a full (B,S,di,N) tensor is ~50 KB/token and
+        # was the dominant dry-run temp for the hybrid arch)
+        chunk = min(256, s)
+        pad = (-s) % chunk
+        dt_c = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        x_c = jnp.pad(xin.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+        b_c = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        c_c = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        n_ch = (s + pad) // chunk
+        resh = lambda t: jnp.moveaxis(
+            t.reshape(b, n_ch, chunk, *t.shape[2:]), 1, 0)
+        from .sharding import BATCH, constrain
+
+        @jax.checkpoint
+        def chunk_body(h_prev, xs):
+            dt_b, x_b, bm_b, cm_b = xs                     # (B,chunk,..)
+            decay = jnp.exp(dt_b[..., None] * a[None, None])
+            decay = constrain(decay, BATCH, None, "model", None)
+            inc = (dt_b * x_b)[..., None] * bm_b[:, :, None, :]
+            inc = constrain(inc, BATCH, None, "model", None)
+            h_all = _ssm_scan(decay, inc, h_prev)          # (B,chunk,di,N)
+            y_b = jnp.einsum("bsdn,bsn->bsd", h_all, cm_b)
+            return h_all[:, -1], y_b
+
+        h0i = h0 if h0 is not None else jnp.zeros((b, di, n), jnp.float32)
+        h_last, y_chunks = jax.lax.scan(
+            chunk_body, h0i, (resh(dt_c), resh(x_c), resh(b_c), resh(c_c)))
+        y = jnp.moveaxis(y_chunks, 0, 1).reshape(b, s + pad, di)[:, :s]
+    y = y + xin.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None]
+    y = (y.astype(mode.operand_dtype) * jax.nn.silu(z))
+    out = mode_dot(y, params["w_out"], mode)
+    if return_state:
+        return out, SSMState(h=h_last, conv=new_tail)
+    return out

@@ -1,0 +1,218 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory with
+recurrence), after Beck et al., arXiv:2405.04517.
+
+Both use exponential gating with the max-stabilizer m_t.  The recurrences
+are strictly sequential in t (sLSTM by construction — the paper's point —
+and mLSTM here in its fused-recurrent form), expressed as single lax.scan
+ops; decode carries O(1) state per layer, so xlstm runs long_500k natively.
+
+Shapes: B batch, S time, H heads, hd = d_model/H head dim, di = 2*d inner.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.precision import ComputeMode, mode_dot
+from .layers import rms_norm
+from .ssm import _causal_conv
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray        # (B, H, hd, hd) matrix memory
+    n: jnp.ndarray        # (B, H, hd) normalizer
+    m: jnp.ndarray        # (B, H) stabilizer
+    conv: jnp.ndarray     # (B, cw-1, di) conv tail
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray        # (B, d)
+    n: jnp.ndarray        # (B, d)
+    h: jnp.ndarray        # (B, d)
+    m: jnp.ndarray        # (B, d)
+
+
+def _mlstm_step(carry, xs):
+    """One step of the stabilized mLSTM recurrence (decode path)."""
+    c, n, m = carry
+    qt, kt, vt, li, lf = xs                       # (B,H,hd) x3, (B,H) x2
+    m_new = jnp.maximum(lf + m, li)
+    i_p = jnp.exp(li - m_new)[..., None]          # (B,H,1)
+    f_p = jnp.exp(lf + m - m_new)[..., None]
+    c = f_p[..., None] * c + i_p[..., None] * (vt[..., :, None] * kt[..., None, :])
+    n = f_p * n + i_p * kt
+    denom = jnp.maximum(jnp.abs(jnp.sum(n * qt, axis=-1, keepdims=True)),
+                        jnp.exp(-m_new)[..., None])
+    y = jnp.einsum("bhvk,bhk->bhv", c, qt) / denom
+    return (c, n, m_new), y
+
+
+def _mlstm_cell(q, k, v, log_i, log_f, state, *, chunk: int = 256):
+    """Chunkwise-parallel stabilized mLSTM (exact reformulation).
+
+    Per chunk with entry state (C0, n0, m0) and cumulative in-chunk decay
+    F_t = sum_{tau<=t} log_f_tau, define a_tau = log_i_tau - F_tau and the
+    running stabilizer M_t = max(m0 - 0, cummax_tau<=t a_tau) (relative to
+    m0 after shifting); then
+
+        y_t  = [ S_t v + e^{m0'-M_t} (q_t C0) ] / max(|n_t.q_t|, e^{-m_t})
+        S_t,tau = (q_t.k_tau) e^{a_tau - M_t}   for tau <= t
+        n_t  = e^{m0'-M_t} n0 + sum_{tau<=t} e^{a_tau - M_t} k_tau
+        m_t  = F_t + M_t
+
+    — pure matmuls + cumsums within the chunk (no per-step matrix state),
+    with the (C, n, m) state carried across chunks by a short scan.  This
+    is algebraically identical to the sequential recurrence (tested) and is
+    what makes xlstm train_4k fit: the sequential form stores a
+    (B, H, hd, hd) state per *timestep* in the backward pass.
+
+    q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H).  Returns (y, c, n, m).
+    """
+    b, s, h, hd = q.shape
+    if s == 1:
+        (c, n, m), y = _mlstm_step((state.c, state.n, state.m),
+                                   (q[:, 0], k[:, 0], v[:, 0],
+                                    log_i[:, 0], log_f[:, 0]))
+        return y[:, None], c, n, m
+
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)      # i=0: padded steps inert
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    n_ch = (s + pad) // chunk
+    resh4 = lambda t: jnp.moveaxis(
+        t.reshape(b, n_ch, chunk, h, hd), 1, 0)     # (n_ch,B,chunk,H,hd)
+    resh3 = lambda t: jnp.moveaxis(
+        t.reshape(b, n_ch, chunk, h), 1, 0)
+
+    @jax.checkpoint
+    def chunk_body(carry, xs):
+        c0, n0, m0 = carry                          # (B,H,hdv,hdk),(B,H,hd),(B,H)
+        qc, kc, vc, lic, lfc = xs                   # (B,L,H,hd)... (B,L,H)
+        f_cum = jnp.cumsum(lfc, axis=1)             # F_t   (B,L,H)
+        a = lic - f_cum                             # a_tau (B,L,H)
+        m0r = m0[:, None]                           # (B,1,H)
+        m_run = jnp.maximum(jax.lax.cummax(a, axis=1), m0r)   # M_t (B,L,H)
+        # pairwise coefficient exp(a_tau - M_t), tau <= t:  (B,t,tau,H)
+        e = jnp.exp(a[:, None, :, :] - m_run[:, :, None, :])
+        tri = jnp.tril(jnp.ones((qc.shape[1], qc.shape[1]), bool))
+        e = jnp.where(tri[None, :, :, None], e, 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc)        # q_t . k_tau
+        sv = jnp.einsum("btsh,btsh,bshd->bthd", scores, e, vc)
+        inter = jnp.exp(m0r - m_run)                          # (B,t,H)
+        q_c0 = jnp.einsum("bthk,bhvk->bthv", qc, c0)          # q_t C0
+        y_num = sv + inter[..., None] * q_c0
+        n_t = inter[..., None] * n0[:, None] + \
+            jnp.einsum("btsh,bshd->bthd", e, kc)
+        m_t = f_cum + m_run
+        denom = jnp.maximum(
+            jnp.abs(jnp.sum(n_t * qc, axis=-1, keepdims=True)),
+            jnp.exp(-m_t)[..., None])
+        y = y_num / denom
+        # chunk-end state: coefficients exp(a_tau - M_L)
+        end = jnp.exp(m0 - m_run[:, -1])                      # (B,H)
+        eL = jnp.exp(a - m_run[:, -1:, :])                    # (B,L,H)
+        c_new = end[..., None, None] * c0 + \
+            jnp.einsum("bsh,bshv,bshk->bhvk", eL, vc, kc)
+        n_new = end[..., None] * n0 + jnp.einsum("bsh,bshk->bhk", eL, kc)
+        m_new = m_t[:, -1]
+        return (c_new, n_new, m_new), y
+
+    (c, n, m), ys = jax.lax.scan(
+        chunk_body, (state.c, state.n, state.m),
+        (resh4(q), resh4(k), resh4(v), resh3(log_i), resh3(log_f)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s + pad, h, hd)[:, :s]
+    return y, c, n, m
+
+
+def mlstm_block(params: dict, x: jnp.ndarray, cfg, *,
+                state: Optional[MLSTMState] = None,
+                return_state: bool = False,
+                mode: ComputeMode = ComputeMode.RELAXED):
+    """Pre-LN mLSTM block with x2 up-projection and gated output."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    di = 2 * d
+    hd = di // h
+
+    if state is None:
+        cw = params["conv_w"].shape[0]
+        state = MLSTMState(
+            c=jnp.zeros((b, h, hd, hd), jnp.float32),
+            n=jnp.zeros((b, h, hd), jnp.float32),
+            m=jnp.full((b, h), -1e30, jnp.float32),
+            conv=jnp.zeros((b, cw - 1, di), mode.operand_dtype))
+
+    xz = mode_dot(x, params["w_in"], mode)             # (B,S,2di)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, new_tail = _causal_conv(xi, params["conv_w"].astype(xi.dtype), state.conv)
+    xc = jax.nn.silu(xc)
+
+    q = mode_dot(xc, params["wq"], mode).reshape(b, s, h, hd).astype(jnp.float32)
+    k = (mode_dot(xc, params["wk"], mode).reshape(b, s, h, hd)
+         .astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    v = mode_dot(xi, params["wv"], mode).reshape(b, s, h, hd).astype(jnp.float32)
+    log_i = (mode_dot(xi, params["w_i"], ComputeMode.PRECISE)
+             .astype(jnp.float32).reshape(b, s, h))
+    log_f = jax.nn.log_sigmoid(
+        mode_dot(xi, params["w_f"], ComputeMode.PRECISE)
+        .astype(jnp.float32).reshape(b, s, h))
+
+    y, c, n, m = _mlstm_cell(q, k, v, log_i, log_f, state)
+    y = rms_norm(y.reshape(b, s, h, hd), params["cell_norm"],
+                 cfg.norm_eps).reshape(b, s, di)
+    y = y.astype(mode.operand_dtype) * jax.nn.silu(z)
+    out = mode_dot(y, params["w_out"], mode)
+    if return_state:
+        return out, MLSTMState(c=c, n=n, m=m, conv=new_tail)
+    return out
+
+
+def slstm_block(params: dict, x: jnp.ndarray, cfg, *,
+                state: Optional[SLSTMState] = None,
+                return_state: bool = False,
+                mode: ComputeMode = ComputeMode.RELAXED):
+    """sLSTM with diagonal recurrent gate weights + 4/3 gated FFN."""
+    b, s, d = x.shape
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = SLSTMState(c=zeros, n=zeros, h=zeros,
+                           m=jnp.full((b, d), -1e30, jnp.float32))
+
+    gates = mode_dot(x, params["w_gates"], mode).astype(jnp.float32)  # (B,S,4d)
+    r = params["r_gates"].astype(jnp.float32)                         # (4, d)
+
+    def step(carry, g_t):
+        c, n, h_prev, m = carry
+        gz, gi, gf, go = jnp.split(g_t, 4, axis=-1)   # each (B, d)
+        gz = gz + r[0] * h_prev
+        gi = gi + r[1] * h_prev
+        gf = gf + r[2] * h_prev
+        go = go + r[3] * h_prev
+        m_new = jnp.maximum(jax.nn.log_sigmoid(gf) + m, gi)
+        i_p = jnp.exp(gi - m_new)
+        f_p = jnp.exp(jax.nn.log_sigmoid(gf) + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(gz)
+        n = f_p * n + i_p
+        h_new = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    (c, n, h_last, m), hs = jax.lax.scan(step, (state.c, state.n, state.h,
+                                                state.m),
+                                         jnp.moveaxis(gates, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(mode.operand_dtype)             # (B,S,d)
+    y = rms_norm(y, params["cell_norm"], cfg.norm_eps)
+    # post-cell gated FFN, factor 4/3 (xLSTM paper's sLSTM block)
+    hgate = jax.nn.gelu(mode_dot(y, params["w_ff_g"], mode)) \
+        * mode_dot(y, params["w_ff_u"], mode)
+    out = mode_dot(hgate, params["w_ff_d"], mode)
+    if return_state:
+        return out, SLSTMState(c=c, n=n, h=h_last, m=m)
+    return out

@@ -1,0 +1,3 @@
+from .engine import GenerationResult, ServingEngine
+
+__all__ = ["ServingEngine", "GenerationResult"]

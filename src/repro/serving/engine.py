@@ -1,0 +1,98 @@
+"""Batched serving engine: prefill + decode loop over a KV/state cache.
+
+The inference-side "synthesized program" (paper §III): construction jit's
+and (optionally AOT-compiles) prefill and decode_step once with the
+configured batch/context, then serves batches of requests.  Greedy or
+temperature sampling; per-request EOS tracking; continuous position
+bookkeeping so repeated generate() calls extend the same cache.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.precision import ComputeMode
+from ..nn import model as M
+from ..nn.config import ModelConfig
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray            # (B, n_generated)
+    prefill_seconds: float
+    decode_seconds: float
+    steps: int
+
+    @property
+    def decode_tokens_per_second(self) -> float:
+        b = self.tokens.shape[0]
+        return b * self.steps / max(self.decode_seconds, 1e-9)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_context: int,
+                 mode: ComputeMode = ComputeMode.RELAXED,
+                 window_override: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_context = max_context
+        self.mode = mode
+        self.window_override = window_override
+        self._prefill = jax.jit(partial(
+            M.prefill, cfg=cfg, capacity=max_context, mode=mode,
+            window_override=window_override))
+        self._decode = jax.jit(partial(
+            M.decode_step, cfg=cfg, mode=mode,
+            window_override=window_override))
+
+    def generate(self, prompts: jnp.ndarray, *, max_new_tokens: int,
+                 aux: Optional[jnp.ndarray] = None,
+                 eos_id: Optional[int] = None,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> GenerationResult:
+        """prompts: (B, S) int32.  Greedy when temperature == 0."""
+        b, s = prompts.shape
+        assert s + max_new_tokens <= self.max_context, "context overflow"
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params, prompts, aux=aux)
+        logits.block_until_ready()
+        t_prefill = time.perf_counter() - t0
+
+        out: List[np.ndarray] = []
+        finished = np.zeros((b,), bool)
+        tok = self._sample(logits, temperature, key)
+        t0 = time.perf_counter()
+        for i in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            if eos_id is not None:
+                finished |= (out[-1][:, 0] == eos_id)
+                if finished.all():
+                    break
+            if i == max_new_tokens - 1:
+                break
+            logits, caches = self._decode(self.params, caches, tok,
+                                          jnp.int32(s + i))
+            if key is not None:
+                key = jax.random.fold_in(key, i)
+            tok = self._sample(logits[:, None] if logits.ndim == 2 else logits,
+                               temperature, key)
+        jax.block_until_ready(caches)
+        t_decode = time.perf_counter() - t0
+        return GenerationResult(tokens=np.concatenate(out, axis=1),
+                                prefill_seconds=t_prefill,
+                                decode_seconds=t_decode, steps=len(out))
+
+    def _sample(self, logits: jnp.ndarray, temperature: float,
+                key: Optional[jax.Array]) -> jnp.ndarray:
+        if logits.ndim == 3:
+            logits = logits[:, -1]
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)[:, None]

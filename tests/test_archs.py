@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests: reduced same-family configs (2 layers,
+d_model<=512, <=4 experts) run one forward + one train step on CPU and a
+prefill/decode parity check, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_arch_names, get_config, get_smoke_config
+from repro.core.precision import ComputeMode
+from repro.nn import model as M
+from repro.optim import adamw_init, adamw_update
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 16
+MODE = ComputeMode.PRECISE
+
+
+def _aux_for(cfg, key):
+    if cfg.is_encoder_decoder:
+        return jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.num_image_tokens:
+        return jax.random.normal(key, (B, cfg.num_image_tokens, cfg.d_model))
+    return None
+
+
+@pytest.fixture(scope="module", params=all_arch_names())
+def arch(request):
+    name = request.param
+    cfg = get_smoke_config(name)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return name, cfg, params
+
+
+def test_full_config_matches_assignment(arch):
+    name, _, _ = arch
+    cfg = get_config(name)
+    # spot-check the published numbers are what the assignment lists
+    expected = {
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+        "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "qwen3-32b": (64, 5120, 64, 8, 25600, 151936),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "gemma2-9b": (42, 3584, 16, 8, 14336, 256000),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+    }[name]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (name, got, expected)
+
+
+def test_forward_shapes_no_nans(arch):
+    name, cfg, params = arch
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    aux = _aux_for(cfg, jax.random.PRNGKey(2))
+    logits = M.forward(params, toks, cfg, aux=aux, mode=MODE, remat=False)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits))), f"NaN in {name} forward"
+
+
+def test_train_step_finite(arch):
+    name, cfg, params = arch
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.PRNGKey(4), (B, S), 0, cfg.vocab_size)
+    aux = _aux_for(cfg, jax.random.PRNGKey(5))
+
+    def loss(p):
+        return M.loss_fn(p, toks, labels, cfg, aux=aux, mode=MODE, chunk=8)
+
+    val, grads = jax.value_and_grad(loss)(params)
+    assert np.isfinite(float(val)), f"{name} loss not finite"
+    gleaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in gleaves), \
+        f"{name} has non-finite grads"
+    state = adamw_init(params)
+    new_params, new_state = adamw_update(grads, state, params, lr=1e-3)
+    assert int(new_state.step) == 1
+    # params actually moved
+    moved = any(float(jnp.max(jnp.abs(a - b))) > 0
+                for a, b in zip(jax.tree.leaves(new_params),
+                                jax.tree.leaves(params)))
+    assert moved, f"{name} update was a no-op"
+    # loss decreases after a few steps on the same batch (sanity learnable)
+    p, st = new_params, new_state
+    for _ in range(3):
+        v, g = jax.value_and_grad(loss)(p)
+        p, st = adamw_update(g, st, p, lr=1e-3)
+    assert float(loss(p)) < float(val), f"{name} loss did not decrease"
+
+
+def test_prefill_decode_matches_forward(arch):
+    name, cfg, params = arch
+    toks = jax.random.randint(jax.random.PRNGKey(6), (B, S), 0, cfg.vocab_size)
+    aux = _aux_for(cfg, jax.random.PRNGKey(7))
+    full = M.forward(params, toks, cfg, aux=aux, mode=MODE, remat=False)
+    lp, caches = M.prefill(params, toks[:, :S - 1], cfg, capacity=S, aux=aux,
+                           mode=MODE)
+    # prefill last-token logits == forward at S-2
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(full[:, S - 2]),
+                               rtol=2e-4, atol=2e-4)
+    ld, _ = M.decode_step(params, caches, toks[:, S - 1:], jnp.int32(S - 1),
+                          cfg, mode=MODE)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_long_context_policy_declared(arch):
+    name, cfg, params = arch
+    assert cfg.long_context in ("native", "sliding_override", "skip")
+    if cfg.arch_type in ("ssm", "hybrid"):
+        assert cfg.long_context == "native"
+    if name == "whisper-small":
+        assert cfg.long_context == "skip"
+
+
+def test_sliding_window_decode_ring_buffer(arch):
+    """Decode with a windowed cache must agree with windowed forward."""
+    name, cfg, params = arch
+    if cfg.long_context == "skip":
+        pytest.skip("whisper: no long-context decode")
+    wo = 8 if cfg.long_context == "sliding_override" else 0
+    toks = jax.random.randint(jax.random.PRNGKey(8), (B, S), 0, cfg.vocab_size)
+    aux = _aux_for(cfg, jax.random.PRNGKey(9))
+    if aux is not None:
+        pytest.skip("aux archs exercise ring decode via dense layers only")
+    full = M.forward(params, toks, cfg, aux=aux, mode=MODE, remat=False,
+                     window_override=wo)
+    lp, caches = M.prefill(params, toks[:, :S - 1], cfg, capacity=S, aux=aux,
+                           mode=MODE, window_override=wo)
+    ld, _ = M.decode_step(params, caches, toks[:, S - 1:], jnp.int32(S - 1),
+                          cfg, mode=MODE, window_override=wo)
+    np.testing.assert_allclose(np.asarray(ld), np.asarray(full[:, -1]),
+                               rtol=3e-4, atol=3e-4)

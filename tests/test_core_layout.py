@@ -1,0 +1,74 @@
+"""Property + unit tests for the map-major layout (paper §IV-B, Eqs. 3-5)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (from_map_major, mapmajor_scatter_order,
+                               num_groups, thread_to_whm, to_map_major,
+                               weights_to_map_major, whm_to_thread)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@given(c=st.integers(1, 40), u=st.sampled_from([2, 4, 8, 16]),
+       h=st.integers(1, 6), w=st.integers(1, 6))
+@settings(max_examples=60, deadline=None)
+def test_roundtrip_is_identity(c, u, h, w):
+    x = jnp.arange(2 * c * h * w, dtype=jnp.float32).reshape(2, c, h, w)
+    mm = to_map_major(x, u)
+    assert mm.shape == (2, num_groups(c, u), h, w, u)
+    back = from_map_major(mm, c)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+@given(u=st.sampled_from([2, 4, 8]), w=st.integers(1, 9), h=st.integers(1, 9),
+       stacks=st.integers(1, 5))
+@settings(max_examples=60, deadline=None)
+def test_eqs_3_4_5_bijection(u, w, h, stacks):
+    """Thread id <-> (w, h, m) must be a bijection over [0, alpha)."""
+    m_total = stacks * u
+    xs = np.arange(m_total * w * h)
+    ws, hs, ms = thread_to_whm(xs, u, w, h)
+    assert ws.max() < w and hs.max() < h and ms.max() < m_total
+    back = whm_to_thread(ws, hs, ms, u, w, h)
+    np.testing.assert_array_equal(back, xs)
+
+
+def test_eq2_ordering_matches_paper():
+    """Paper Eq. (2) with u=4: first 8 flat entries of map-major order."""
+    # element (layer, row, col) = (c, h, w); build C=8, H=2, W=3
+    c, h, w, u = 8, 2, 3, 4
+    x = jnp.arange(c * h * w).reshape(1, c, h, w)
+    mm = np.asarray(to_map_major(x, u)).reshape(-1)
+    flat = lambda cc, hh, ww: cc * h * w + hh * w + ww
+    expect_prefix = [flat(0, 0, 0), flat(1, 0, 0), flat(2, 0, 0), flat(3, 0, 0),
+                     flat(0, 0, 1), flat(1, 0, 1), flat(2, 0, 1), flat(3, 0, 1)]
+    assert mm[:8].tolist() == expect_prefix
+    # second stack (layers 4..7) starts after the full first stack
+    assert mm[u * h * w] == flat(4, 0, 0)
+
+
+def test_scatter_order_is_mapmajor_rowmajor():
+    """Writing output[x] for thread x == row-major (C/u, H, W, u) storage
+    (the zero-overhead reorder of Fig. 7)."""
+    u, w_out, h_out, m_total = 4, 5, 3, 8
+    perm = mapmajor_scatter_order(m_total, h_out, w_out, u)
+    src = np.arange(m_total * h_out * w_out, dtype=np.float32)  # CHW row-major
+    mm = np.empty_like(src)
+    mm[np.arange(len(src))] = src[perm]  # thread x writes pixel perm[x]
+    ref = np.asarray(to_map_major(
+        jnp.asarray(src).reshape(1, m_total, h_out, w_out), u)).reshape(-1)
+    np.testing.assert_array_equal(mm, ref)
+
+
+def test_weights_reorder_preserves_model_size():
+    """Paper: 'Parameter reordering does not change the model size' (modulo
+    lane padding when C % u != 0)."""
+    w = jnp.ones((16, 8, 3, 3))
+    mm = weights_to_map_major(w, u=4)
+    assert mm.size == w.size
+    w2 = jnp.ones((16, 6, 3, 3))  # 6 % 4 != 0 -> padded to 8
+    mm2 = weights_to_map_major(w2, u=4)
+    assert mm2.size == 16 * 8 * 3 * 3

@@ -1,0 +1,118 @@
+"""Per-kernel shape/dtype/mode sweeps vs the pure-jnp oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import to_map_major
+from repro.core.parallelism import conv_olp
+from repro.core.precision import ComputeMode, mode_tolerance
+from repro.kernels.conv_mapmajor.conv_mapmajor import conv_mapmajor
+from repro.kernels.conv_mapmajor.ops import conv2d_mapmajor
+from repro.kernels.conv_mapmajor.ref import conv_mapmajor_ref, pack_weights
+from repro.kernels.matmul_mapmajor.ops import matmul
+from repro.kernels.matmul_mapmajor.ref import matmul_ref
+
+MODES = [ComputeMode.PRECISE, ComputeMode.RELAXED, ComputeMode.IMPRECISE]
+
+
+def _assert_close(got, want, mode):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    tol = mode_tolerance(mode)
+    np.testing.assert_allclose(got, want, rtol=tol,
+                               atol=tol * max(np.abs(want).max(), 1.0))
+
+
+# ---------------------------------------------------------------- conv ----
+CONV_CASES = [
+    # (cin, cout, hw, k, stride, padding, u)
+    (6, 8, 12, 3, 1, "SAME", 4),
+    (3, 16, 23, 5, 2, "SAME", 8),
+    (12, 7, 9, 1, 1, "VALID", 4),
+    (5, 5, 17, 3, 3, "VALID", 8),
+    (3, 96, 31, 11, 4, "SAME", 8),   # AlexNet conv1 geometry, reduced
+    (4, 4, 8, 7, 1, "SAME", 4),
+]
+
+
+@pytest.mark.parametrize("cin,cout,hw,k,stride,padding,u", CONV_CASES)
+@pytest.mark.parametrize("mode", MODES)
+def test_conv_kernel_vs_xla(cin, cout, hw, k, stride, padding, u, mode):
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, cin, hw, hw), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (cout, cin, k, k)) * 0.1
+    got = conv2d_mapmajor(x, w, stride=stride, padding=padding, mode=mode, u=u)
+    want = conv_olp(x, w, stride=stride, padding=padding, mode=mode)
+    assert got.shape == want.shape
+    _assert_close(got, want, mode)
+
+
+def test_conv_kernel_vs_ref_oracle():
+    """Kernel against the module's own ref.py oracle on map-major operands."""
+    u = 8
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 16, 10, 10))
+    w = jax.random.normal(jax.random.PRNGKey(3), (24, 16, 3, 3)) * 0.1
+    x_mm = to_map_major(x, u, channel_axis=1)
+    w_mm = pack_weights(w, u)
+    got = conv_mapmajor(x_mm, w_mm, stride=1, mode=ComputeMode.PRECISE)
+    want = conv_mapmajor_ref(x_mm, w_mm, stride=1, mode=ComputeMode.PRECISE)
+    _assert_close(got, want, ComputeMode.PRECISE)
+
+
+def test_conv_bias_and_output_is_mapmajor_consumable():
+    """C3: output of one layer feeds the next with no relayout."""
+    u = 4
+    x = jax.random.normal(jax.random.PRNGKey(4), (1, 4, 8, 8))
+    w1 = jax.random.normal(jax.random.PRNGKey(5), (8, 4, 3, 3)) * 0.2
+    b1 = jnp.ones((8,)) * 0.1
+    w2 = jax.random.normal(jax.random.PRNGKey(6), (4, 8, 3, 3)) * 0.2
+    y1 = conv2d_mapmajor(x, w1, b1, padding="SAME", mode=ComputeMode.PRECISE, u=u)
+    y2 = conv2d_mapmajor(y1, w2, padding="SAME", mode=ComputeMode.PRECISE, u=u)
+    ref1 = conv_olp(x, w1, padding="SAME") + b1[None, :, None, None]
+    ref2 = conv_olp(ref1, w2, padding="SAME")
+    _assert_close(y2, ref2, ComputeMode.PRECISE)
+
+
+@given(cin=st.integers(1, 9), cout=st.integers(1, 9), hw=st.integers(4, 14),
+       k=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]))
+@settings(max_examples=25, deadline=None)
+def test_conv_kernel_property_sweep(cin, cout, hw, k, stride):
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, cin, hw, hw))
+    w = jax.random.normal(jax.random.PRNGKey(8), (cout, cin, k, k)) * 0.1
+    got = conv2d_mapmajor(x, w, stride=stride, padding="SAME",
+                          mode=ComputeMode.PRECISE, u=4)
+    want = conv_olp(x, w, stride=stride, padding="SAME")
+    assert got.shape == want.shape
+    _assert_close(got, want, ComputeMode.PRECISE)
+
+
+# -------------------------------------------------------------- matmul ----
+@pytest.mark.parametrize("m,k,n", [(7, 33, 5), (256, 512, 256), (100, 300, 50),
+                                   (1, 128, 1), (64, 64, 64)])
+@pytest.mark.parametrize("mode", MODES)
+def test_matmul_kernel_vs_oracle(m, k, n, mode):
+    a = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    got = matmul(a, b, mode=mode, bm=64, bn=64, bk=64)
+    want = matmul_ref(a, b, mode=mode)
+    assert got.dtype == mode.out_dtype
+    _assert_close(got, want, mode)
+
+
+def test_matmul_batched_leading_dims():
+    a = jax.random.normal(jax.random.PRNGKey(2), (3, 5, 40))
+    b = jax.random.normal(jax.random.PRNGKey(3), (40, 17))
+    got = matmul(a, b, mode=ComputeMode.PRECISE, bm=32, bn=32, bk=32)
+    want = a @ b
+    assert got.shape == (3, 5, 17)
+    _assert_close(got, want, ComputeMode.PRECISE)
+
+
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70))
+@settings(max_examples=25, deadline=None)
+def test_matmul_property_sweep(m, k, n):
+    a = jax.random.normal(jax.random.PRNGKey(4), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(5), (k, n))
+    got = matmul(a, b, mode=ComputeMode.PRECISE, bm=32, bn=32, bk=32)
+    _assert_close(got, a @ b, ComputeMode.PRECISE)

@@ -1,0 +1,120 @@
+"""Tests for the inexact-computing machinery (C4) and the synthesizer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cnn import squeezenet, init_network_params
+from repro.core import (ComputeMode, Parallelism, QuantizedTensor, conv_olp,
+                        mode_dot, quantize_int8, run_network, select_modes,
+                        synthesize)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------------- precision ---
+def test_mode_dtypes():
+    a = jnp.ones((4, 8))
+    b = jnp.ones((8, 4))
+    assert mode_dot(a, b, ComputeMode.PRECISE).dtype == jnp.float32
+    assert mode_dot(a, b, ComputeMode.RELAXED).dtype == jnp.bfloat16
+    assert mode_dot(a, b, ComputeMode.IMPRECISE).dtype == jnp.bfloat16
+
+
+@given(st.integers(1, 8), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_int8_quantization_bounded_error(oc, ic):
+    w = jax.random.normal(jax.random.PRNGKey(oc * 13 + ic), (oc, ic, 3, 3))
+    q = quantize_int8(w)
+    assert q.q.dtype == jnp.int8
+    back = q.dequantize(jnp.float32)
+    # per-channel symmetric: error bounded by scale/2 per element
+    err = np.abs(np.asarray(back - w))
+    bound = np.asarray(q.scale) / 2 + 1e-7
+    assert (err <= bound + 1e-6).all()
+
+
+def test_quantized_conv_close():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 10, 10))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 3, 3))
+    exact = conv_olp(x, w, padding="SAME")
+    q = quantize_int8(w)
+    approx = conv_olp(x, q, padding="SAME", mode=ComputeMode.IMPRECISE_INT8)
+    rel = float(jnp.linalg.norm(approx.astype(jnp.float32) - exact)
+                / jnp.linalg.norm(exact))
+    assert rel < 0.08, rel
+
+
+# ---------------------------------------------------------- mode selector ---
+def test_selector_all_fast_when_insensitive():
+    """If inexact arithmetic never changes the metric, everything goes
+    imprecise in exactly 2 evaluations (the paper's observed case)."""
+    layers = ["a", "b", "c"]
+    rep = select_modes(layers, lambda modes: 1.0, max_degradation=0.0)
+    assert all(m is ComputeMode.IMPRECISE for m in rep.modes.values())
+    assert rep.evaluations == 2
+
+
+def test_selector_backs_off_sensitive_layer():
+    """A layer whose imprecision costs accuracy must end less imprecise."""
+    def evaluate(modes):
+        return 1.0 - (0.5 if modes["b"] is ComputeMode.IMPRECISE else 0.0)
+    rep = select_modes(["a", "b", "c"], evaluate, max_degradation=0.1)
+    assert rep.modes["b"] is not ComputeMode.IMPRECISE
+    assert rep.modes["a"] is ComputeMode.IMPRECISE
+    assert rep.degradation <= 0.1
+
+
+def test_selector_respects_budget_zero():
+    def evaluate(modes):
+        bad = sum(1 for m in modes.values() if m is not ComputeMode.PRECISE)
+        return 1.0 - 0.01 * bad
+    rep = select_modes(["a", "b"], evaluate, max_degradation=0.0)
+    assert all(m is ComputeMode.PRECISE for m in rep.modes.values())
+
+
+# ------------------------------------------------------------ synthesizer ---
+@pytest.fixture(scope="module")
+def small_net():
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 64, 64))
+    return net, params, x
+
+
+def test_synthesized_forced_modes_match_reference(small_net):
+    net, params, x = small_net
+    ref = run_network(net, params, x)
+    prog = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
+    np.testing.assert_allclose(np.asarray(prog.infer(x)), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_backend_matches_xla(small_net):
+    net, params, x = small_net
+    px = synthesize(net, params, forced_mode=ComputeMode.PRECISE,
+                    backend="xla")
+    pp = synthesize(net, params, forced_mode=ComputeMode.PRECISE,
+                    backend="pallas")
+    np.testing.assert_allclose(np.asarray(pp.infer(x)),
+                               np.asarray(px.infer(x)), rtol=1e-5, atol=1e-5)
+
+
+def test_parallelism_policies_agree(small_net):
+    net, params, x = small_net
+    ref = run_network(net, params, x)
+    for par in (Parallelism.FLP, Parallelism.KLP):
+        out = run_network(net, params, x, parallelism=par)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_mode_selection_report(small_net):
+    net, params, x = small_net
+    labels = jnp.argmax(run_network(net, params, x), -1)
+    prog = synthesize(net, params, validation=(x, labels),
+                      max_degradation=0.25)
+    assert prog.mode_report is not None
+    assert prog.mode_report.degradation <= 0.25 + 1e-6
+    assert "Cappuccino synthesis report" in prog.report()

@@ -1,0 +1,65 @@
+"""Chunkwise-parallel mLSTM must equal the sequential recurrence exactly."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn.xlstm import MLSTMState, _mlstm_cell, _mlstm_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _sequential(q, k, v, li, lf, state):
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, li, lf))
+    (c, n, m), ys = jax.lax.scan(_mlstm_step, (state.c, state.n, state.m), xs)
+    return jnp.moveaxis(ys, 0, 1), c, n, m
+
+
+def _rand(b, s, h, hd, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, h, hd)) / np.sqrt(hd)
+    v = jax.random.normal(ks[2], (b, s, h, hd))
+    li = jax.random.normal(ks[3], (b, s, h)) * 2
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, h)) * 2)
+    st_ = MLSTMState(c=jnp.zeros((b, h, hd, hd)), n=jnp.zeros((b, h, hd)),
+                     m=jnp.full((b, h), -1e30), conv=None)
+    return q, k, v, li, lf, st_
+
+
+@given(s=st.integers(2, 50), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_chunkwise_equals_sequential(s, chunk, seed):
+    q, k, v, li, lf, st_ = _rand(2, s, 2, 8, seed)
+    y_ref, c_ref, n_ref, m_ref = _sequential(q, k, v, li, lf, st_)
+    y, c, n, m = _mlstm_cell(q, k, v, li, lf, st_, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_state_continuation_across_calls():
+    q, k, v, li, lf, st_ = _rand(1, 30, 2, 8, 9)
+    y_ref, c_ref, *_ = _sequential(q, k, v, li, lf, st_)
+    y1, c1, n1, m1 = _mlstm_cell(q[:, :13], k[:, :13], v[:, :13],
+                                 li[:, :13], lf[:, :13], st_, chunk=8)
+    st2 = MLSTMState(c=c1, n=n1, m=m1, conv=None)
+    y2, c2, *_ = _mlstm_cell(q[:, 13:], k[:, 13:], v[:, 13:],
+                             li[:, 13:], lf[:, 13:], st2, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c2), np.asarray(c_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_single_step_matches():
+    q, k, v, li, lf, st_ = _rand(2, 1, 2, 8, 3)
+    y_ref, c_ref, *_ = _sequential(q, k, v, li, lf, st_)
+    y, c, *_ = _mlstm_cell(q, k, v, li, lf, st_)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), rtol=1e-5)
