@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cnn import squeezenet, init_network_params
-from repro.core import ComputeMode, run_network, synthesize
+from repro.core import IMPL_DEFAULT, ComputeMode, run_network, synthesize
 from repro.data.synthetic import imagenet_like
 
 from .common import csv_row
@@ -37,6 +37,12 @@ def run(n_val: int = 64):
                       if m is ComputeMode.IMPRECISE)
     rows.append(csv_row("mode_selection.imprecise_layers", float(n_imprecise),
                         f"of={len(rep.modes)}"))
+    # Stage A plan artifact: how the planner assigned implementations
+    impls = [p.impl for _, p in prog.plan if p.impl != IMPL_DEFAULT]
+    for impl in sorted(set(impls)):
+        rows.append(csv_row(f"mode_selection.plan.{impl}",
+                            float(impls.count(impl)),
+                            f"origin={prog.plan.origin}"))
     return rows
 
 

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.cnn import alexnet, init_network_params
-from repro.core import ComputeMode, Parallelism, run_network
+from repro.core import (ComputeMode, ExecutionPlan, Parallelism, plan_network,
+                        run_network)
 
 from .common import bench, csv_row
 
@@ -37,18 +38,31 @@ def run(reps: int = 8):
             t = bench(f, x, w, reps=reps)
             rows.append(csv_row(f"table3.layer.{lname}.{par.value}", t * 1e6))
 
-    # whole-network: OLP vs FLP (the CNNDroid-style policy), exact + imprecise
+    # whole-network: OLP vs FLP (the CNNDroid-style policy), exact + imprecise,
+    # each policy expressed as a uniform execution plan.
     net = alexnet(scale=0.25, num_classes=100, input_hw=115)
     params = init_network_params(net, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(2), (1, 3, 115, 115))
     for par in (Parallelism.OLP, Parallelism.FLP):
         for mode in (ComputeMode.PRECISE, ComputeMode.IMPRECISE):
             modes = {n: mode for n in net.inexactable_layers}
-            f = jax.jit(lambda xx, par=par, modes=modes: run_network(
-                net, params, xx, modes=modes, parallelism=par))
+            plan = ExecutionPlan.uniform(net, backend="xla", parallelism=par,
+                                         modes=modes)
+            f = jax.jit(lambda xx, plan=plan: run_network(
+                net, params, xx, plan=plan))
             t = bench(f, x, reps=reps)
             rows.append(csv_row(f"table3.alexnet.{par.value}.{mode.value}",
                                 t * 1e6))
+
+    # the planner's own per-layer assignment, for comparison with the
+    # uniform policies above
+    for mode in (ComputeMode.PRECISE, ComputeMode.IMPRECISE):
+        modes = {n: mode for n in net.inexactable_layers}
+        plan = plan_network(net, modes=modes)
+        f = jax.jit(lambda xx, plan=plan: run_network(net, params, xx,
+                                                      plan=plan))
+        t = bench(f, x, reps=reps)
+        rows.append(csv_row(f"table3.alexnet.planned.{mode.value}", t * 1e6))
     return rows
 
 

@@ -29,6 +29,8 @@ def main():
 
     program = synthesize(net, params, validation=(images, labels),
                          max_degradation=0.0)
+    # The report includes Stage A's artifact: the per-layer execution plan
+    # (implementation, thread policy, compute mode, channel-group width u).
     print(program.report())
 
     # Serve a batch with the synthesized program

@@ -4,15 +4,27 @@
 - precision:     inexact computing modes (§IV-C)
 - parallelism:   OLP / FLP / KLP workload allocation (§IV-A)
 - network:       network-description DAG (paper input #1)
-- mode_selector: per-layer inexact-mode analysis (§IV-C)
+- plan:          per-layer execution plans (Stage A's artifact)
+- planner:       static cost model + measured autotune (Stage A's brain)
+- layer_ops:     the layer-op / implementation registries (the executor)
+- mode_selector: per-layer inexact-mode analysis (§IV-C) + joint refinement
 - synthesizer:   the end-to-end synthesis pipeline (§III)
 """
 from .layout import (LANES, from_map_major, mapmajor_scatter_order, num_groups,
                      thread_to_whm, to_map_major, weights_to_map_major,
                      whm_to_thread)
-from .mode_selector import ModeSelectionReport, select_modes
-from .network import Layer, NetworkDescription, run_network
-from .parallelism import Parallelism, conv2d, conv_flp, conv_klp, conv_olp
+from .layer_ops import (CONV_IMPLS as CONV_IMPL_REGISTRY, DENSE_IMPLS,
+                        LAYER_OPS, apply_layer, register_conv_impl,
+                        register_dense_impl, register_layer_op)
+from .mode_selector import ModeSelectionReport, refine_plan, select_modes
+from .network import (Layer, NetworkDescription, collect_activations,
+                      run_network)
+from .parallelism import (Parallelism, conv2d, conv2d_planned, conv_flp,
+                          conv_klp, conv_olp)
+from .plan import (DEFAULT_LAYER_PLAN, IMPL_DEFAULT, IMPL_PALLAS,
+                   IMPL_SEQUENTIAL, IMPL_XLA, ExecutionPlan, LayerPlan)
+from .planner import (PlannerConfig, autotune_plan, plan_network,
+                      trace_shapes)
 from .precision import (MODES_FASTEST_FIRST, ComputeMode, QuantizedTensor,
                         mode_dot, mode_tolerance, prepare_operand,
                         prepare_weight, quantize_int8, resolve_weight)
@@ -21,9 +33,15 @@ from .synthesizer import SynthesizedProgram, synthesize
 __all__ = [
     "LANES", "from_map_major", "mapmajor_scatter_order", "num_groups",
     "thread_to_whm", "to_map_major", "weights_to_map_major", "whm_to_thread",
-    "ModeSelectionReport", "select_modes",
-    "Layer", "NetworkDescription", "run_network",
-    "Parallelism", "conv2d", "conv_flp", "conv_klp", "conv_olp",
+    "CONV_IMPL_REGISTRY", "DENSE_IMPLS", "LAYER_OPS", "apply_layer",
+    "register_conv_impl", "register_dense_impl", "register_layer_op",
+    "ModeSelectionReport", "refine_plan", "select_modes",
+    "Layer", "NetworkDescription", "collect_activations", "run_network",
+    "Parallelism", "conv2d", "conv2d_planned", "conv_flp", "conv_klp",
+    "conv_olp",
+    "DEFAULT_LAYER_PLAN", "IMPL_DEFAULT", "IMPL_PALLAS", "IMPL_SEQUENTIAL",
+    "IMPL_XLA", "ExecutionPlan", "LayerPlan",
+    "PlannerConfig", "autotune_plan", "plan_network", "trace_shapes",
     "MODES_FASTEST_FIRST", "ComputeMode", "QuantizedTensor", "mode_dot",
     "mode_tolerance", "prepare_operand", "prepare_weight", "quantize_int8",
     "resolve_weight", "SynthesizedProgram", "synthesize",

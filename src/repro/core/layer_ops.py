@@ -1,0 +1,218 @@
+"""Layer-op registry: the planned executor's dispatch tables.
+
+Replaces the old ``run_network`` if/elif chain with two registries:
+
+  * ``LAYER_OPS`` — one op per layer *kind* (conv, relu, maxpool, ...).
+    An op evaluates one layer given its :class:`~repro.core.plan.LayerPlan`
+    and inputs; structural ops ignore the plan beyond the mode.
+  * ``CONV_IMPLS`` / ``DENSE_IMPLS`` — named *implementations* for the two
+    parametric kinds (where >99% of inference time goes, paper §II).  The
+    planner picks among these per layer; the kernels register their own
+    entries from ``repro.kernels.*.ops`` so the core stays import-light.
+
+Op signature::
+
+    op(layer, plan, params_or_None, ins: list[arrays]) -> array
+
+Registration::
+
+    @register_layer_op("relu")
+    def _relu(layer, plan, params, ins): ...
+
+    @register_conv_impl("pallas_mapmajor")
+    def _conv(layer, plan, params, x): ...
+
+Implementations registered lazily: looking up an unknown conv/dense impl
+first imports the kernel modules (which self-register), then retries, so
+importing ``repro.core`` never drags in Pallas.  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .parallelism import conv2d_planned, conv_sequential
+from .plan import IMPL_SEQUENTIAL, IMPL_XLA, LayerPlan
+from .precision import mode_dot
+
+LayerOp = Callable[..., jnp.ndarray]
+
+LAYER_OPS: Dict[str, LayerOp] = {}
+CONV_IMPLS: Dict[str, LayerOp] = {}
+DENSE_IMPLS: Dict[str, LayerOp] = {}
+
+# Modules whose import registers additional conv/dense implementations.
+_KERNEL_MODULES = ("repro.kernels.conv_mapmajor.ops",
+                   "repro.kernels.matmul_mapmajor.ops")
+
+
+def register_layer_op(kind: str):
+    def deco(fn: LayerOp) -> LayerOp:
+        if kind in LAYER_OPS:
+            raise ValueError(f"layer op {kind!r} already registered")
+        LAYER_OPS[kind] = fn
+        return fn
+    return deco
+
+
+def register_conv_impl(name: str):
+    def deco(fn: LayerOp) -> LayerOp:
+        CONV_IMPLS[name] = fn
+        return fn
+    return deco
+
+
+def register_dense_impl(name: str):
+    def deco(fn: LayerOp) -> LayerOp:
+        DENSE_IMPLS[name] = fn
+        return fn
+    return deco
+
+
+def _lookup(table: Dict[str, LayerOp], name: str, what: str) -> LayerOp:
+    if name not in table:
+        for mod in _KERNEL_MODULES:       # lazy self-registration
+            importlib.import_module(mod)
+    if name not in table:
+        raise KeyError(f"no {what} implementation {name!r}; "
+                       f"registered: {sorted(table)}")
+    return table[name]
+
+
+def conv_impl(name: str) -> LayerOp:
+    return _lookup(CONV_IMPLS, name, "conv")
+
+
+def dense_impl(name: str) -> LayerOp:
+    return _lookup(DENSE_IMPLS, name, "dense")
+
+
+def layer_op(kind: str) -> LayerOp:
+    try:
+        return LAYER_OPS[kind]
+    except KeyError:
+        raise ValueError(f"unknown layer kind {kind!r}; "
+                         f"registered: {sorted(LAYER_OPS)}") from None
+
+
+def apply_layer(layer, plan: LayerPlan, params: Optional[dict],
+                ins: List[jnp.ndarray]) -> jnp.ndarray:
+    """Evaluate one layer under its plan — the executor's only entry point."""
+    return layer_op(layer.kind)(layer, plan, params, ins)
+
+
+# ---------------------------------------------------------------------------
+# Parametric kinds: dispatch through the impl registries.
+# ---------------------------------------------------------------------------
+
+@register_layer_op("conv")
+def _conv(layer, plan, params, ins):
+    return conv_impl(plan.impl)(layer, plan, params, ins[0])
+
+
+@register_layer_op("dense")
+def _dense(layer, plan, params, ins):
+    return dense_impl(plan.impl)(layer, plan, params, ins[0])
+
+
+def add_bias(y: jnp.ndarray, layer, params) -> jnp.ndarray:
+    if layer.use_bias and params.get("b") is not None:
+        b = params["b"].astype(y.dtype)
+        y = y + (b[None, :, None, None] if y.ndim == 4 else b)
+    return y
+
+
+@register_conv_impl(IMPL_XLA)
+def _conv_xla(layer, plan, params, x):
+    y = conv2d_planned(x, params["w"], plan, stride=layer.stride,
+                       padding=layer.padding)
+    return add_bias(y, layer, params)
+
+
+@register_conv_impl(IMPL_SEQUENTIAL)
+def _conv_sequential(layer, plan, params, x):
+    y = conv_sequential(x, params["w"], stride=layer.stride,
+                        padding=layer.padding)
+    return add_bias(y, layer, params)
+
+
+@register_dense_impl(IMPL_XLA)
+def _dense_xla(layer, plan, params, x):
+    y = mode_dot(x.reshape(x.shape[0], -1), params["w"], plan.mode)
+    return add_bias(y, layer, params)
+
+
+@register_dense_impl(IMPL_SEQUENTIAL)
+def _dense_sequential(layer, plan, params, x):
+    """Scalar baseline: one matvec column at a time via lax.scan."""
+    a2 = x.reshape(x.shape[0], -1).astype(jnp.float32)
+    wseq = params["w"].astype(jnp.float32)
+    _, cols = lax.scan(lambda _, wc: (None, a2 @ wc[:, None]),
+                       None, jnp.moveaxis(wseq, 1, 0))
+    y = jnp.moveaxis(cols[..., 0], 0, 1)
+    return add_bias(y, layer, params)
+
+
+# ---------------------------------------------------------------------------
+# Structural kinds (single canonical implementation each).
+# ---------------------------------------------------------------------------
+
+@register_layer_op("relu")
+def _relu(layer, plan, params, ins):
+    return jnp.maximum(ins[0], 0)
+
+
+@register_layer_op("maxpool")
+def _maxpool(layer, plan, params, ins):
+    return lax.reduce_window(ins[0], -jnp.inf, lax.max,
+                             (1, 1, layer.pool_size, layer.pool_size),
+                             (1, 1, layer.stride, layer.stride),
+                             layer.padding)
+
+
+@register_layer_op("avgpool")
+def _avgpool(layer, plan, params, ins):
+    x = ins[0]
+    dims = (1, 1, layer.pool_size, layer.pool_size)
+    strides = (1, 1, layer.stride, layer.stride)
+    s = lax.reduce_window(x, 0.0, lax.add, dims, strides, layer.padding)
+    n = lax.reduce_window(jnp.ones_like(x), 0.0, lax.add, dims, strides,
+                          layer.padding)
+    return s / n
+
+
+@register_layer_op("gap")
+def _gap(layer, plan, params, ins):
+    return jnp.mean(ins[0], axis=(2, 3))
+
+
+@register_layer_op("lrn")
+def _lrn(layer, plan, params, ins):
+    x = ins[0]
+    xf = x.astype(jnp.float32)
+    sq = jnp.square(xf)
+    half = layer.lrn_size // 2
+    pad = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
+    window = sum(pad[:, i:i + xf.shape[1]] for i in range(layer.lrn_size))
+    y = xf / jnp.power(1.0 + (layer.lrn_alpha / layer.lrn_size) * window,
+                       layer.lrn_beta)
+    return y.astype(x.dtype)
+
+
+@register_layer_op("flatten")
+def _flatten(layer, plan, params, ins):
+    return ins[0].reshape(ins[0].shape[0], -1)
+
+
+@register_layer_op("concat")
+def _concat(layer, plan, params, ins):
+    return jnp.concatenate([i.astype(ins[0].dtype) for i in ins], axis=1)
+
+
+@register_layer_op("softmax")
+def _softmax(layer, plan, params, ins):
+    return jax.nn.softmax(ins[0].astype(jnp.float32), axis=-1)

@@ -21,13 +21,24 @@ Algorithm (greedy, fastest-mode-first — matches the paper's goal function):
 
 The evaluation function is injected, so the same selector serves CNN top-1
 accuracy and transformer validation loss.
+
+:func:`refine_plan` is the plan-aware entry point (joint mode+impl
+refinement): mode probes are evaluated *under the planned per-layer
+implementations*, and the chosen modes feed back into the plan — a layer
+pinned PRECISE leaves the inexact-mode Pallas kernel for the XLA
+HIGHEST-precision path, the TPU analogue of RenderScript making
+vectorization available only in the inexact modes (paper §IV-C).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
 from .precision import ComputeMode, MODES_FASTEST_FIRST
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .plan import ExecutionPlan
 
 # evaluate(modes: dict[layer, ComputeMode]) -> float metric (higher better)
 EvalFn = Callable[[Dict[str, ComputeMode]], float]
@@ -107,3 +118,56 @@ def select_modes(layer_names: Sequence[str], evaluate: EvalFn, *,
                 break
     final = run(modes)
     return ModeSelectionReport(ref, final, modes, evals, trace)
+
+
+# evaluate_plan(plan) -> float metric (higher better)
+PlanEvalFn = Callable[["ExecutionPlan"], float]
+
+
+def refine_plan(plan: "ExecutionPlan", layer_names: Sequence[str],
+                evaluate_plan: PlanEvalFn, *,
+                max_degradation: float = 0.0,
+                allow_int8: bool = False
+                ) -> Tuple[ModeSelectionReport, "ExecutionPlan"]:
+    """Joint mode+impl refinement of an execution plan (§IV-C on plans).
+
+    1. Run the greedy mode selector, with every probe evaluated under the
+       plan's per-layer implementations (not a fixed global backend).
+    2. Fold the chosen modes back into the plan.
+    3. Implementation feedback: a layer the selector pinned PRECISE leaves
+       the map-major Pallas kernel for the fused-XLA path — the kernel's
+       throughput advantage exists only under the inexact modes (bf16 MXU),
+       exactly as RenderScript reserves vectorization for them; XLA's
+       HIGHEST-precision conv is the faithful f32 implementation.
+    4. Re-measure once if step 3 changed anything, so the report's final
+       metric describes the program actually emitted.
+    """
+    from .plan import IMPL_PALLAS, IMPL_XLA
+
+    def evaluate(modes: Dict[str, ComputeMode]) -> float:
+        return evaluate_plan(plan.with_modes(modes))
+
+    report = select_modes(layer_names, evaluate,
+                          max_degradation=max_degradation,
+                          allow_int8=allow_int8)
+    refined = plan.with_modes(report.modes)
+
+    switched = []
+    for name in layer_names:
+        lp = refined.for_layer(name)
+        if lp.mode is ComputeMode.PRECISE and lp.impl == IMPL_PALLAS:
+            refined = refined.with_layer(name, dataclasses.replace(
+                lp, impl=IMPL_XLA,
+                reason=(lp.reason + "; " if lp.reason else "")
+                + "joint: PRECISE -> xla (f32 HIGHEST path)"))
+            switched.append(name)
+
+    if switched:
+        final = float(evaluate_plan(refined))
+        trace = report.trace + [
+            f"joint impl refinement: {', '.join(switched)} -> xla "
+            f"(PRECISE); re-measured {final:.4f}"]
+        report = dataclasses.replace(report, final_metric=final,
+                                     evaluations=report.evaluations + 1,
+                                     trace=trace)
+    return report, refined

@@ -11,15 +11,15 @@ first-class feature because GoogLeNet and SqueezeNet are DAGs, not chains.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
-from jax import lax
 
+from .layout import LANES
 from .precision import ComputeMode
-from .parallelism import Parallelism, conv2d
+from .parallelism import Parallelism
 
 
 @dataclass(frozen=True)
@@ -119,104 +119,75 @@ class NetworkDescription:
 
 
 # ---------------------------------------------------------------------------
-# Reference (non-synthesized) executor.  The synthesizer produces an
-# optimized program; this executor defines the semantics both share.
+# Planned executor.  Each layer runs through the layer-op registry
+# (layer_ops.py) under its LayerPlan; the synthesizer produces the plan,
+# this executor defines the semantics every implementation shares.
 # ---------------------------------------------------------------------------
 
-def _maxpool(x, size, stride, padding):
-    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 1, size, size),
-                             (1, 1, stride, stride), padding)
+def _resolve_plan(net: NetworkDescription, plan, modes, parallelism,
+                  backend, mapmajor_u):
+    """Build the effective ExecutionPlan from either a real plan or the
+    deprecated global (backend, parallelism) flag pair."""
+    from .plan import ExecutionPlan
+
+    if plan is not None:
+        if backend is not None or parallelism is not None \
+                or mapmajor_u is not None:
+            raise ValueError("pass either plan= or the deprecated backend=/"
+                             "parallelism=/mapmajor_u= flags, not both")
+        return plan.with_modes(modes) if modes else plan
+
+    if backend is not None or parallelism is not None:
+        warnings.warn(
+            "run_network(backend=..., parallelism=...) is deprecated; pass "
+            "plan=ExecutionPlan (e.g. from repro.core.planner.plan_network) "
+            "instead", DeprecationWarning, stacklevel=3)
+    return ExecutionPlan.uniform(net, backend=backend or "xla",
+                                 parallelism=parallelism or Parallelism.OLP,
+                                 modes=modes,
+                                 u=mapmajor_u if mapmajor_u is not None
+                                 else LANES)
 
 
-def _avgpool(x, size, stride, padding):
-    s = lax.reduce_window(x, 0.0, lax.add, (1, 1, size, size),
-                          (1, 1, stride, stride), padding)
-    ones = jnp.ones_like(x)
-    n = lax.reduce_window(ones, 0.0, lax.add, (1, 1, size, size),
-                          (1, 1, stride, stride), padding)
-    return s / n
+def _execute(net: NetworkDescription, params, x, plan) -> Dict[str, jnp.ndarray]:
+    from .layer_ops import apply_layer
 
-
-def _lrn(x, size, alpha, beta):
-    sq = jnp.square(x)
-    half = size // 2
-    pad = jnp.pad(sq, ((0, 0), (half, half), (0, 0), (0, 0)))
-    window = sum(pad[:, i:i + x.shape[1]] for i in range(size))
-    return x / jnp.power(1.0 + (alpha / size) * window, beta)
+    acts: Dict[str, jnp.ndarray] = {"input": x}
+    for layer in net.layers:
+        ins = [acts[i] for i in layer.inputs]
+        acts[layer.name] = apply_layer(layer, plan.for_layer(layer.name),
+                                       params.get(layer.name), ins)
+    return acts
 
 
 def run_network(net: NetworkDescription, params: Dict[str, Dict[str, jnp.ndarray]],
                 x: jnp.ndarray, *,
                 modes: Optional[Dict[str, ComputeMode]] = None,
-                parallelism: Parallelism = Parallelism.OLP,
-                backend: str = "xla", mapmajor_u: int = 128) -> jnp.ndarray:
-    """Evaluate the DAG.  ``modes`` maps layer name -> ComputeMode (default
-    PRECISE); conv/dense honor it, structural layers run in f32.
+                plan=None,
+                parallelism: Optional[Parallelism] = None,
+                backend: Optional[str] = None,
+                mapmajor_u: Optional[int] = None) -> jnp.ndarray:
+    """Evaluate the DAG under an :class:`~repro.core.plan.ExecutionPlan`.
 
-    backend="xla" uses lax convs (OLP semantics, XLA codegen); "pallas" uses
-    the map-major Pallas kernels (interpret mode on CPU) — the synthesized
-    TPU program.  Both share these semantics.
+    ``plan`` gives each layer its implementation / thread policy / compute
+    mode / channel-group width; ``modes`` (layer name -> ComputeMode)
+    overlays the plan's modes — structural layers run in f32 regardless.
+
+    ``backend=`` / ``parallelism=`` are the deprecated global flags; they
+    lower to a uniform plan via ``ExecutionPlan.uniform`` with the historic
+    dispatch semantics ("xla" = lax convs / OLP codegen, "pallas" =
+    map-major Pallas kernels, "sequential" = the paper's Fig. 2 baseline).
     """
-    modes = modes or {}
-    acts: Dict[str, jnp.ndarray] = {"input": x}
-    for layer in net.layers:
-        ins = [acts[i] for i in layer.inputs]
-        a = ins[0] if ins else None
-        mode = modes.get(layer.name, ComputeMode.PRECISE)
-        if layer.kind == "conv":
-            p = params[layer.name]
-            if backend == "sequential":
-                from .parallelism import conv_sequential
-                y = conv_sequential(a, p["w"], stride=layer.stride,
-                                    padding=layer.padding)
-                if layer.use_bias:
-                    y = y + p["b"][None, :, None, None].astype(y.dtype)
-            elif backend == "pallas" and parallelism is Parallelism.OLP:
-                from ..kernels.conv_mapmajor.ops import conv2d_mapmajor
-                from .precision import resolve_weight
-                y = conv2d_mapmajor(a, resolve_weight(p["w"], mode), p.get("b"),
-                                    stride=layer.stride,
-                                    padding=layer.padding, mode=mode,
-                                    u=mapmajor_u)
-            else:
-                y = conv2d(a, p["w"], stride=layer.stride, padding=layer.padding,
-                           mode=mode, parallelism=parallelism)
-                if layer.use_bias:
-                    y = y + p["b"][None, :, None, None].astype(y.dtype)
-        elif layer.kind == "relu":
-            y = jnp.maximum(a, 0)
-        elif layer.kind == "maxpool":
-            y = _maxpool(a, layer.pool_size, layer.stride, layer.padding)
-        elif layer.kind == "avgpool":
-            y = _avgpool(a, layer.pool_size, layer.stride, layer.padding)
-        elif layer.kind == "gap":
-            y = jnp.mean(a, axis=(2, 3))
-        elif layer.kind == "lrn":
-            y = _lrn(a.astype(jnp.float32), layer.lrn_size, layer.lrn_alpha,
-                     layer.lrn_beta).astype(a.dtype)
-        elif layer.kind == "dense":
-            p = params[layer.name]
-            if backend == "sequential":
-                a2 = a.reshape(a.shape[0], -1).astype(jnp.float32)
-                wseq = p["w"].astype(jnp.float32)
-                _, cols = lax.scan(lambda _, wc: (None, a2 @ wc[:, None]),
-                                   None, jnp.moveaxis(wseq, 1, 0))
-                y = jnp.moveaxis(cols[..., 0], 0, 1)
-            elif backend == "pallas":
-                from ..kernels.matmul_mapmajor.ops import matmul
-                y = matmul(a.reshape(a.shape[0], -1), p["w"], mode=mode)
-            else:
-                from .precision import mode_dot
-                y = mode_dot(a.reshape(a.shape[0], -1), p["w"], mode)
-            if layer.use_bias:
-                y = y + p["b"].astype(y.dtype)
-        elif layer.kind == "flatten":
-            y = a.reshape(a.shape[0], -1)
-        elif layer.kind == "concat":
-            y = jnp.concatenate([i.astype(ins[0].dtype) for i in ins], axis=1)
-        elif layer.kind == "softmax":
-            y = jax.nn.softmax(a.astype(jnp.float32), axis=-1)
-        else:
-            raise ValueError(f"unknown layer kind {layer.kind}")
-        acts[layer.name] = y
-    return acts[net.layers[-1].name]
+    eff = _resolve_plan(net, plan, modes or {}, parallelism, backend,
+                        mapmajor_u)
+    return _execute(net, params, x, eff)[net.layers[-1].name]
+
+
+def collect_activations(net: NetworkDescription, params, x: jnp.ndarray, *,
+                        plan=None,
+                        modes: Optional[Dict[str, ComputeMode]] = None
+                        ) -> Dict[str, jnp.ndarray]:
+    """Run the planned executor keeping every intermediate activation —
+    used by the planner's measured autotune pass and by debugging tools."""
+    eff = _resolve_plan(net, plan, modes or {}, None, None, None)
+    return _execute(net, params, x, eff)

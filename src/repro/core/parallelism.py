@@ -100,8 +100,12 @@ def conv_klp(x: jnp.ndarray, w: jnp.ndarray, *, stride: int = 1,
     n, c, h_in, w_in = xa.shape
     m, _, kh, kw = wa.shape
     if padding == "SAME":
-        ph, pw = (kh - 1) // 2, (kw - 1) // 2
-        xa = jnp.pad(xa, ((0, 0), (0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw)))
+        # XLA SAME semantics: out = ceil(in/stride), asymmetric low/high pad
+        out_h, out_w = -(-h_in // stride), -(-w_in // stride)
+        ph = max((out_h - 1) * stride + kh - h_in, 0)
+        pw = max((out_w - 1) * stride + kw - w_in, 0)
+        xa = jnp.pad(xa, ((0, 0), (0, 0), (ph // 2, ph - ph // 2),
+                          (pw // 2, pw - pw // 2)))
         h_in, w_in = xa.shape[2], xa.shape[3]
     h_out = (h_in - kh) // stride + 1
     w_out = (w_in - kw) // stride + 1
@@ -172,3 +176,11 @@ def conv2d(x, w, *, stride=1, padding="VALID", mode=ComputeMode.PRECISE,
            parallelism: Parallelism = Parallelism.OLP):
     """Convolution under a chosen workload-allocation policy and mode."""
     return CONV_IMPLS[parallelism](x, w, stride=stride, padding=padding, mode=mode)
+
+
+def conv2d_planned(x, w, plan, *, stride=1, padding="VALID"):
+    """Convolution under a :class:`~repro.core.plan.LayerPlan`: the plan
+    carries both the thread policy and the compute mode, so call sites no
+    longer thread two loose flags."""
+    return conv2d(x, w, stride=stride, padding=padding, mode=plan.mode,
+                  parallelism=plan.parallelism)

@@ -1,0 +1,143 @@
+"""Execution plans: the synthesis artifact of Stage A (paper §III).
+
+Cappuccino's Stage A ("primary program synthesis") chooses *how each layer
+runs*: which implementation (XLA conv, map-major Pallas kernel, sequential
+baseline), which thread-level workload-allocation policy (OLP/KLP/FLP,
+§IV-A), which inexact computing mode (§IV-C), and which channel-group
+width ``u`` (§IV-B).  Historically this repo encoded those choices as two
+*global* kwargs (``backend=``, ``parallelism=``); this module makes them a
+first-class, per-layer artifact:
+
+  :class:`LayerPlan`      one layer's (impl, parallelism, mode, u) choice,
+                          plus the cost-rule that justified it;
+  :class:`ExecutionPlan`  the whole network's plan — what the planner emits,
+                          what the executor consumes, and what the
+                          synthesis report prints.
+
+``ExecutionPlan.uniform`` is the compatibility lowering: it maps the
+deprecated global ``backend``/``parallelism`` flags onto a uniform per-layer
+plan with exactly the old dispatch semantics, so legacy call sites keep
+working unchanged.  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import TYPE_CHECKING, Dict, Iterator, Mapping, Optional, Tuple
+
+from .layout import LANES
+from .parallelism import Parallelism
+from .precision import ComputeMode
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .network import NetworkDescription
+
+# Implementation registry keys (see layer_ops.py for the registries).
+IMPL_XLA = "xla"                      # lax conv / mode_dot (OLP semantics)
+IMPL_PALLAS = "pallas_mapmajor"       # map-major Pallas kernels (§IV-B)
+IMPL_SEQUENTIAL = "sequential"        # paper Fig. 2 scalar baseline
+IMPL_DEFAULT = "default"              # structural layers: single canonical op
+
+
+@dataclass(frozen=True)
+class LayerPlan:
+    """How one layer executes.  Frozen: plans are values, not state."""
+    impl: str = IMPL_DEFAULT
+    parallelism: Parallelism = Parallelism.OLP
+    mode: ComputeMode = ComputeMode.PRECISE
+    u: int = LANES                    # map-major channel-group width
+    reason: str = ""                  # planner cost-rule (report/debugging)
+
+    def with_mode(self, mode: ComputeMode) -> "LayerPlan":
+        return replace(self, mode=mode)
+
+    def describe(self) -> str:
+        bits = [self.impl, self.parallelism.value, self.mode.value,
+                f"u={self.u}"]
+        return " ".join(bits) + (f"  [{self.reason}]" if self.reason else "")
+
+
+#: Plan used for any layer the plan does not mention (structural layers).
+DEFAULT_LAYER_PLAN = LayerPlan()
+
+
+@dataclass
+class ExecutionPlan:
+    """Per-layer plans for one network — Stage A's output artifact."""
+    net_name: str
+    layers: Dict[str, LayerPlan] = field(default_factory=dict)
+    origin: str = "planner"           # "planner" | "uniform" | "autotune"
+
+    def for_layer(self, name: str) -> LayerPlan:
+        return self.layers.get(name, DEFAULT_LAYER_PLAN)
+
+    def __iter__(self) -> Iterator[Tuple[str, LayerPlan]]:
+        return iter(self.layers.items())
+
+    # -- functional updates -------------------------------------------------
+    def with_modes(self, modes: Mapping[str, ComputeMode]) -> "ExecutionPlan":
+        """Overlay a layer->mode assignment (the mode selector's output)."""
+        if not modes:
+            return self
+        new = dict(self.layers)
+        for name, mode in modes.items():
+            new[name] = new.get(name, DEFAULT_LAYER_PLAN).with_mode(mode)
+        return ExecutionPlan(self.net_name, new, origin=self.origin)
+
+    def with_layer(self, name: str, plan: LayerPlan) -> "ExecutionPlan":
+        new = dict(self.layers)
+        new[name] = plan
+        return ExecutionPlan(self.net_name, new, origin=self.origin)
+
+    @property
+    def modes(self) -> Dict[str, ComputeMode]:
+        return {n: p.mode for n, p in self.layers.items()}
+
+    # -- reporting ----------------------------------------------------------
+    def table(self) -> str:
+        """Human-readable per-layer plan table for the synthesis report."""
+        lines = [f"{'layer':28s} {'impl':16s} {'policy':6s} "
+                 f"{'mode':14s} {'u':>4s}  reason"]
+        for name, p in self.layers.items():
+            lines.append(f"{name:28s} {p.impl:16s} {p.parallelism.value:6s} "
+                         f"{p.mode.value:14s} {p.u:4d}  {p.reason}")
+        return "\n".join(lines)
+
+    # -- legacy lowering ----------------------------------------------------
+    @classmethod
+    def uniform(cls, net: "NetworkDescription", *,
+                backend: str = "xla",
+                parallelism: Parallelism = Parallelism.OLP,
+                modes: Optional[Mapping[str, ComputeMode]] = None,
+                u: int = LANES) -> "ExecutionPlan":
+        """Lower the deprecated global (backend, parallelism) flag pair to a
+        uniform per-layer plan reproducing the historical dispatch exactly:
+
+          backend="xla"        conv -> policy impl, dense -> mode_dot
+          backend="pallas"     conv -> map-major kernel iff OLP (the kernel
+                               implements only OLP; other policies fall back
+                               to the XLA policy impl), dense -> map-major
+                               matmul
+          backend="sequential" conv & dense -> scalar-loop baseline
+        """
+        if backend not in ("xla", "pallas", "sequential"):
+            raise ValueError(f"unknown backend {backend!r}")
+        modes = modes or {}
+        layers: Dict[str, LayerPlan] = {}
+        why = f"uniform lowering of backend={backend!r}"
+        for layer in net.layers:
+            mode = modes.get(layer.name, ComputeMode.PRECISE)
+            if not layer.has_params:
+                layers[layer.name] = LayerPlan(mode=mode)
+                continue
+            if backend == "sequential":
+                impl = IMPL_SEQUENTIAL
+            elif backend == "pallas":
+                if layer.kind == "conv" and parallelism is not Parallelism.OLP:
+                    impl = IMPL_XLA   # kernel is OLP-only; historical fallback
+                else:
+                    impl = IMPL_PALLAS
+            else:
+                impl = IMPL_XLA
+            layers[layer.name] = LayerPlan(impl=impl, parallelism=parallelism,
+                                           mode=mode, u=u, reason=why)
+        return cls(net.name, layers, origin="uniform")

@@ -1,0 +1,325 @@
+"""Execution planner: Stage A's brain (paper §III "primary program
+synthesis", generalized per-layer).
+
+Assigns every layer a :class:`~repro.core.plan.LayerPlan` via a *static*
+cost model, with an optional *measured* autotune refinement:
+
+  Rule 1 (VMEM envelope)     A conv whose padded input plane exceeds the
+                             Pallas kernel's per-block VMEM budget
+                             (:func:`fits_vmem`) must take the fused-XLA
+                             path — the kernel cannot hold the block.
+  Rule 2 (group width u)     Pick the map-major channel-group width: the
+                             full 128-lane width when the layer can fill
+                             it, else the smallest power of two covering
+                             the channel count (avoids lane-padding waste,
+                             paper §IV-B).
+  Rule 3 (roofline)          Estimate arithmetic intensity and the
+                             compute/memory roofline terms (same model as
+                             benchmarks/roofline.py, TPU v5e constants).
+                             Compute-bound layers with MXU-filling channel
+                             counts go to the map-major Pallas kernel;
+                             memory-bound or narrow layers stay on XLA,
+                             whose fusion wins when loads dominate.
+  Thread policy              OLP always — the paper's §IV-A conclusion;
+                             KLP/FLP materialize cross-thread partials and
+                             exist as measured baselines only.
+
+``autotune_plan`` replaces the static Rule-3 guess with measurements: it
+captures each parametric layer's actual input activation, times every
+registered candidate implementation on it, and keeps the fastest.
+
+See DESIGN.md §3 for how plans flow through the synthesizer and executor.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layout import LANES
+from .network import Layer, NetworkDescription
+from .parallelism import Parallelism
+from .plan import (IMPL_PALLAS, IMPL_XLA, ExecutionPlan, LayerPlan)
+from .precision import ComputeMode
+
+# TPU v5e per-chip roofline constants (kept in sync with
+# benchmarks/roofline.py, which owns the full model).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+#: FLOPs/byte at which compute time equals memory time.
+RIDGE = PEAK_FLOPS / HBM_BW
+
+
+@dataclass(frozen=True)
+class PlannerConfig:
+    u_max: int = LANES
+    u_min: int = 8
+    #: Minimum min(Cin, Cout) for the MXU to be worth feeding.
+    min_channels_for_pallas: int = 16
+    #: Fraction of the roofline ridge point above which a conv counts as
+    #: compute-bound (1.0 = the exact ridge).
+    compute_bound_fraction: float = 1.0
+    #: Dense layers route to the map-major matmul above these dims.
+    dense_pallas_min_k: int = 256
+    dense_pallas_min_n: int = 128
+    batch: int = 1
+    #: Whether rule 3 may route layers to the Pallas kernels.  None =
+    #: decide from the platform: only a real TPU compiles them; elsewhere
+    #: they run in interpret mode (a simulator), which is never the fast
+    #: path, so the planner keeps XLA.  Force True to exercise the kernels
+    #: (tests, kernel debugging) or False to pin everything to XLA.
+    allow_pallas: Optional[bool] = None
+
+    @property
+    def pallas_enabled(self) -> bool:
+        if self.allow_pallas is not None:
+            return self.allow_pallas
+        return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Shape tracing: (C, H, W) / (F,) per layer output, batch excluded.
+# ---------------------------------------------------------------------------
+
+def _spatial_out(h: int, k: int, stride: int, padding: str) -> int:
+    return -(-h // stride) if padding == "SAME" else (h - k) // stride + 1
+
+
+def trace_shapes(net: NetworkDescription) -> Dict[str, Tuple[int, ...]]:
+    """Static shape inference over the DAG (layers are topologically
+    ordered by construction of the builder API)."""
+    shapes: Dict[str, Tuple[int, ...]] = {"input": tuple(net.input_shape)}
+    for l in net.layers:
+        ins = [shapes[i] for i in l.inputs]
+        s = ins[0] if ins else None
+        if l.kind == "conv":
+            c, h, w = s
+            shapes[l.name] = (l.out_channels,
+                              _spatial_out(h, l.kernel, l.stride, l.padding),
+                              _spatial_out(w, l.kernel, l.stride, l.padding))
+        elif l.kind in ("maxpool", "avgpool"):
+            c, h, w = s
+            shapes[l.name] = (c,
+                              _spatial_out(h, l.pool_size, l.stride, l.padding),
+                              _spatial_out(w, l.pool_size, l.stride, l.padding))
+        elif l.kind == "gap":
+            shapes[l.name] = (s[0],)
+        elif l.kind == "flatten":
+            n = 1
+            for d in s:
+                n *= d
+            shapes[l.name] = (n,)
+        elif l.kind == "dense":
+            shapes[l.name] = (l.out_channels,)
+        elif l.kind == "concat":
+            shapes[l.name] = (sum(i[0] for i in ins),) + tuple(s[1:])
+        else:                    # relu, lrn, softmax: shape-preserving
+            shapes[l.name] = tuple(s)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Static cost model
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayerCost:
+    flops: float
+    bytes: float
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes, 1.0)
+
+    @property
+    def compute_seconds(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_seconds(self) -> float:
+        return self.bytes / HBM_BW
+
+    @property
+    def dominant(self) -> str:
+        return ("compute" if self.compute_seconds >= self.memory_seconds
+                else "memory")
+
+
+def conv_cost(cin: int, h: int, w: int, layer: Layer, batch: int,
+              bytes_per_el: int = 2) -> LayerCost:
+    ho = _spatial_out(h, layer.kernel, layer.stride, layer.padding)
+    wo = _spatial_out(w, layer.kernel, layer.stride, layer.padding)
+    m, k = layer.out_channels, layer.kernel
+    flops = 2.0 * batch * cin * k * k * m * ho * wo
+    byts = bytes_per_el * (batch * cin * h * w          # input read
+                           + m * cin * k * k            # weights read
+                           + batch * m * ho * wo)       # output write
+    return LayerCost(flops, byts)
+
+
+def dense_cost(k: int, n: int, batch: int, bytes_per_el: int = 2) -> LayerCost:
+    flops = 2.0 * batch * k * n
+    byts = bytes_per_el * (batch * k + k * n + batch * n)
+    return LayerCost(flops, byts)
+
+
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _choose_u(cin: int, cout: int, cfg: PlannerConfig) -> int:
+    widest = max(cin, cout)
+    if widest >= cfg.u_max // 2:
+        return cfg.u_max
+    return max(cfg.u_min, _pow2_at_least(widest))
+
+
+def _plan_conv(layer: Layer, cin: int, h: int, w: int,
+               cfg: PlannerConfig, mode: ComputeMode) -> LayerPlan:
+    cost = conv_cost(cin, h, w, layer, cfg.batch)
+    u = _choose_u(cin, layer.out_channels, cfg)
+    ai = cost.arithmetic_intensity
+
+    from ..kernels.conv_mapmajor.ops import fits_vmem
+    if not fits_vmem(h, w, layer.kernel, layer.stride, layer.padding, u, mode):
+        return LayerPlan(
+            impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode, u=u,
+            reason=f"rule1: {h}x{w} input block over VMEM envelope")
+
+    if mode is ComputeMode.PRECISE:
+        # Joint invariant (mode_selector.refine_plan): the vector-MAC kernel
+        # is reserved for inexact modes; PRECISE is XLA's f32 HIGHEST path.
+        return LayerPlan(
+            impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode, u=u,
+            reason="precise: f32 HIGHEST path (vector MAC is inexact-only)")
+
+    if not cfg.pallas_enabled:
+        return LayerPlan(
+            impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode, u=u,
+            reason=f"rule3: Pallas interpret-only on {jax.default_backend()}")
+
+    narrow = min(cin, layer.out_channels) < cfg.min_channels_for_pallas
+    compute_bound = ai >= cfg.compute_bound_fraction * RIDGE
+    if compute_bound and not narrow:
+        return LayerPlan(
+            impl=IMPL_PALLAS, parallelism=Parallelism.OLP, mode=mode, u=u,
+            reason=f"rule3: compute-bound (AI={ai:.0f} >= ridge {RIDGE:.0f})")
+    why = (f"rule3: narrow ({min(cin, layer.out_channels)} ch)" if narrow
+           else f"rule3: memory-bound (AI={ai:.0f} < ridge {RIDGE:.0f})")
+    return LayerPlan(impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode,
+                     u=u, reason=why)
+
+
+def _plan_dense(layer: Layer, in_features: int, cfg: PlannerConfig,
+                mode: ComputeMode) -> LayerPlan:
+    cost = dense_cost(in_features, layer.out_channels, cfg.batch)
+    u = _choose_u(in_features, layer.out_channels, cfg)
+    if (mode is not ComputeMode.PRECISE and cfg.pallas_enabled
+            and in_features >= cfg.dense_pallas_min_k
+            and layer.out_channels >= cfg.dense_pallas_min_n):
+        why = (f"rule3: MXU-filling matmul K={in_features} "
+               f"N={layer.out_channels} (AI={cost.arithmetic_intensity:.1f})")
+        return LayerPlan(impl=IMPL_PALLAS, parallelism=Parallelism.OLP,
+                         mode=mode, u=u, reason=why)
+    if mode is ComputeMode.PRECISE:
+        why = "precise: f32 HIGHEST path (vector MAC is inexact-only)"
+    elif not cfg.pallas_enabled:
+        why = f"rule3: Pallas interpret-only on {jax.default_backend()}"
+    else:
+        why = f"rule3: small matmul K={in_features} N={layer.out_channels}"
+    return LayerPlan(impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode,
+                     u=u, reason=why)
+
+
+def plan_network(net: NetworkDescription, *,
+                 modes: Optional[Dict[str, ComputeMode]] = None,
+                 config: Optional[PlannerConfig] = None) -> ExecutionPlan:
+    """Assign a :class:`LayerPlan` to every layer via the static cost model."""
+    cfg = config or PlannerConfig()
+    modes = modes or {}
+    shapes = trace_shapes(net)
+    layers: Dict[str, LayerPlan] = {}
+    for l in net.layers:
+        mode = modes.get(l.name, ComputeMode.PRECISE)
+        if l.kind == "conv":
+            cin, h, w = shapes[l.inputs[0]]
+            layers[l.name] = _plan_conv(l, cin, h, w, cfg, mode)
+        elif l.kind == "dense":
+            in_shape = shapes[l.inputs[0]]
+            in_features = 1
+            for d in in_shape:
+                in_features *= d
+            layers[l.name] = _plan_dense(l, in_features, cfg, mode)
+        else:
+            layers[l.name] = LayerPlan(mode=mode, reason="structural")
+    return ExecutionPlan(net.name, layers, origin="planner")
+
+
+# ---------------------------------------------------------------------------
+# Measured autotune pass
+# ---------------------------------------------------------------------------
+
+def _time_fn(fn: Callable[[], jnp.ndarray], reps: int) -> float:
+    fn().block_until_ready()                       # compile + warm up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn().block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
+                  plan: ExecutionPlan, *,
+                  candidates: Sequence[str] = (IMPL_XLA, IMPL_PALLAS),
+                  reps: int = 3) -> ExecutionPlan:
+    """Refine a static plan with measurements on real activations.
+
+    Runs the planned network once, capturing every parametric layer's input,
+    then times each candidate implementation in place and keeps the fastest.
+    The Pallas candidate is dropped for VMEM-infeasible convs (rule 1,
+    re-checked here on actual shapes so non-planner plans are covered too):
+    the kernel's own envelope fallback would silently remeasure XLA and
+    could record a Pallas plan for a layer that always executes XLA.
+    """
+    from ..kernels.conv_mapmajor.ops import fits_vmem
+    from .layer_ops import apply_layer
+    from .network import collect_activations
+
+    acts = collect_activations(net, params, x, plan=plan)
+    tuned = dict(plan.layers)
+    for l in net.layers:
+        if not l.has_params:
+            continue
+        base = plan.for_layer(l.name)
+        x_in = acts[l.inputs[0]]
+        layer_candidates = list(candidates)
+        if l.kind == "conv" and IMPL_PALLAS in layer_candidates:
+            _, _, h_in, w_in = x_in.shape
+            if not fits_vmem(h_in, w_in, l.kernel, l.stride, l.padding,
+                             base.u, base.mode):
+                layer_candidates.remove(IMPL_PALLAS)
+        timings: List[Tuple[float, str]] = []
+        for impl in layer_candidates:
+            cand = LayerPlan(impl=impl, parallelism=base.parallelism,
+                             mode=base.mode, u=base.u)
+            run = jax.jit(lambda a, l=l, cand=cand: apply_layer(
+                l, cand, params.get(l.name), [a]))
+            try:
+                timings.append((_time_fn(lambda: run(x_in), reps), impl))
+            except Exception:      # candidate can't run this shape; skip it
+                continue
+        if not timings:
+            continue
+        t_best, impl_best = min(timings)
+        tuned[l.name] = LayerPlan(
+            impl=impl_best, parallelism=base.parallelism, mode=base.mode,
+            u=base.u, reason=f"autotune: {t_best * 1e6:.0f}us best of "
+                             f"{len(timings)}")
+    return ExecutionPlan(net.name, tuned, origin="autotune")

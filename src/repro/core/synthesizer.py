@@ -6,20 +6,25 @@ Inputs (exactly the paper's three):
   3. a validation dataset                    (images, labels).
 
 Stages:
-  A. *Primary program synthesis*: build the OLP-parallel program.
+  A. *Primary program synthesis*: plan the program — the planner assigns
+     every layer an implementation / thread policy / channel-group width
+     via its static cost model (optionally refined by a measured autotune
+     pass).  The artifact is an :class:`ExecutionPlan`, not a flag pair.
   B. *Parameter reordering* (compile-time, §IV-B): weights go map-major so
      the vectorized kernels load u operands per access.  Model size is
      unchanged (modulo lane padding), as the paper notes.
   C. *Inexact-computing analysis* (§IV-C): run the mode selector on the
-     validation set under the user's accuracy constraint.
+     validation set under the user's accuracy constraint, evaluating under
+     the planned implementations (joint mode+impl refinement).
   D. *Software synthesis*: emit the final program — here an XLA-compiled,
-     jitted callable with the per-layer mode policy baked in, plus a
+     jitted callable with the per-layer plan baked in, plus a
      human-readable synthesis report (the analogue of the generated
      RenderScript source).
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Tuple
 
@@ -27,9 +32,11 @@ import jax
 import jax.numpy as jnp
 
 from .layout import LANES, weights_to_map_major
-from .mode_selector import ModeSelectionReport, select_modes
+from .mode_selector import ModeSelectionReport, refine_plan
 from .network import NetworkDescription, run_network
 from .parallelism import Parallelism
+from .plan import ExecutionPlan
+from .planner import PlannerConfig, autotune_plan, plan_network
 from .precision import ComputeMode, prepare_weight
 
 
@@ -37,7 +44,8 @@ from .precision import ComputeMode, prepare_weight
 class SynthesizedProgram:
     """The synthesis artifact: a compiled inference program + metadata."""
     net: NetworkDescription
-    infer: Callable[[jnp.ndarray], jnp.ndarray]   # jitted, modes baked in
+    infer: Callable[[jnp.ndarray], jnp.ndarray]   # jitted, plan baked in
+    plan: ExecutionPlan
     modes: Dict[str, ComputeMode]
     parallelism: Parallelism
     mode_report: Optional[ModeSelectionReport]
@@ -50,7 +58,10 @@ class SynthesizedProgram:
                  f" + vectorized MAC (intra-thread, u={self.vector_width})",
                  f"layers           : {len(self.net.layers)}"
                  f" ({len(self.net.param_layers)} parametric)",
+                 f"plan origin      : {self.plan.origin}",
                  f"synthesis time   : {self.synthesis_seconds:.2f}s",
+                 "execution plan:",
+                 "  " + self.plan.table().replace("\n", "\n  "),
                  "layer modes:"]
         for l in self.net.layers:
             if l.is_inexactable:
@@ -61,14 +72,27 @@ class SynthesizedProgram:
         return "\n".join(lines)
 
 
-def _accuracy_eval(net, params, images, labels, parallelism):
-    """Top-1 classification accuracy evaluator for the mode selector."""
-    def evaluate(modes: Dict[str, ComputeMode]) -> float:
-        logits = run_network(net, params, images, modes=modes,
-                             parallelism=parallelism)
+def _accuracy_eval(net, params, images, labels):
+    """Top-1 accuracy under a candidate plan (modes overlaid per probe).
+
+    Weight-quantizing modes are applied to the probe's weights before
+    evaluation — the selector must measure the program Stage B will emit,
+    not the raw-weight network (casting-only modes need no preparation:
+    the ops cast operands themselves)."""
+    def evaluate_plan(p: ExecutionPlan) -> float:
+        probed = {}
+        for l in net.param_layers:
+            mode = p.for_layer(l.name).mode
+            if mode.quantizes_weights:
+                lp = dict(params[l.name])
+                lp["w"] = prepare_weight(lp["w"], mode, channel_axis=0)
+                probed[l.name] = lp
+            else:
+                probed[l.name] = params[l.name]
+        logits = run_network(net, probed, images, plan=p)
         pred = jnp.argmax(logits, axis=-1)
         return float(jnp.mean((pred == labels).astype(jnp.float32)))
-    return evaluate
+    return evaluate_plan
 
 
 def synthesize(net: NetworkDescription,
@@ -77,30 +101,73 @@ def synthesize(net: NetworkDescription,
                *,
                max_degradation: float = 0.0,
                allow_int8: bool = False,
-               parallelism: Parallelism = Parallelism.OLP,
-               backend: str = "xla",
+               plan: Optional[ExecutionPlan] = None,
+               planner_config: Optional[PlannerConfig] = None,
+               autotune: bool = False,
+               autotune_input: Optional[jnp.ndarray] = None,
+               parallelism: Optional[Parallelism] = None,
+               backend: Optional[str] = None,
                forced_mode: Optional[ComputeMode] = None) -> SynthesizedProgram:
     """Run the full Cappuccino pipeline and return the synthesized program.
 
+    Stage A emits an :class:`ExecutionPlan`: pass ``plan=`` to supply one,
+    or let the planner build it.  ``backend=`` / ``parallelism=`` are the
+    deprecated global flags, lowered to a uniform plan (legacy call sites
+    keep their exact historical dispatch).
+
     ``forced_mode`` skips stage C and pins every tunable layer to one mode —
     used to reproduce the paper's 'Parallel' (RELAXED/PRECISE) and
-    'Imprecise' table columns directly.
+    'Imprecise' table columns directly.  ``autotune=True`` refines the
+    static plan with per-layer measurements on ``autotune_input`` (or the
+    validation images).
     """
     t0 = time.time()
 
-    # Stage C: inexact-computing analysis (or forced mode).
+    # Stage A: primary program synthesis -> ExecutionPlan artifact.
+    if plan is None:
+        if backend is not None or parallelism is not None:
+            warnings.warn(
+                "synthesize(backend=..., parallelism=...) is deprecated; "
+                "pass plan= or let the planner run", DeprecationWarning,
+                stacklevel=2)
+            plan = ExecutionPlan.uniform(
+                net, backend=backend or "xla",
+                parallelism=parallelism or Parallelism.OLP)
+        else:
+            plan = plan_network(net, config=planner_config)
+    if autotune:
+        tune_x = autotune_input if autotune_input is not None else \
+            (validation[0] if validation is not None else None)
+        if tune_x is None:
+            raise ValueError("autotune=True needs autotune_input= or a "
+                             "validation set")
+        plan = autotune_plan(net, params, tune_x, plan)
+
+    # Stage C: inexact-computing analysis (or forced mode), evaluated under
+    # the planned implementations (joint mode+impl refinement).
     mode_report = None
     if forced_mode is not None:
         modes = {n: forced_mode for n in net.inexactable_layers}
     elif validation is not None:
         images, labels = validation
-        evaluate = _accuracy_eval(net, params, images, labels, parallelism)
-        mode_report = select_modes(net.inexactable_layers, evaluate,
-                                   max_degradation=max_degradation,
-                                   allow_int8=allow_int8)
+        evaluate_plan = _accuracy_eval(net, params, images, labels)
+        mode_report, plan = refine_plan(plan, net.inexactable_layers,
+                                        evaluate_plan,
+                                        max_degradation=max_degradation,
+                                        allow_int8=allow_int8)
         modes = mode_report.modes
     else:
         modes = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
+
+    # Fold the chosen modes back into the plan.  A static planner plan is
+    # *re-planned* under the final modes — the cost rules are mode-dependent
+    # (VMEM envelope dtype, PRECISE's f32-path invariant), so a plan drawn
+    # at the PRECISE default would mis-route bf16-feasible layers.  Measured
+    # (autotune) and user/uniform plans keep their impls; only modes overlay.
+    if plan.origin == "planner":
+        plan = plan_network(net, modes=modes, config=planner_config)
+    else:
+        plan = plan.with_modes(modes)
 
     # Stage B: compile-time parameter preparation per chosen mode
     # (cast / int8-quantize; map-major reorder happens inside the Pallas
@@ -114,12 +181,19 @@ def synthesize(net: NetworkDescription,
             p["b"] = p["b"].astype(jnp.float32)
         prepared[l.name] = p
 
-    # Stage D: emit the compiled program with modes baked in.
+    # Stage D: emit the compiled program with the plan baked in.
+    final_plan = plan
+
     def _infer(x):
-        return run_network(net, prepared, x, modes=modes,
-                           parallelism=parallelism, backend=backend)
+        return run_network(net, prepared, x, plan=final_plan)
     infer = jax.jit(_infer)
 
-    return SynthesizedProgram(net=net, infer=infer, modes=modes,
-                              parallelism=parallelism, mode_report=mode_report,
+    # Legacy metadata: the dominant thread policy across parametric layers.
+    policies = {final_plan.for_layer(l.name).parallelism
+                for l in net.param_layers}
+    thread_policy = policies.pop() if len(policies) == 1 else Parallelism.OLP
+
+    return SynthesizedProgram(net=net, infer=infer, plan=final_plan,
+                              modes=modes, parallelism=thread_policy,
+                              mode_report=mode_report,
                               synthesis_seconds=time.time() - t0)

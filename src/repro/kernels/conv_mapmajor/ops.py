@@ -3,6 +3,10 @@
 Handles the NCHW <-> map-major boundary, SAME/VALID padding (including the
 stride-halo rows the kernel's slice-reshape trick needs), channel-group
 padding, and the VMEM envelope check with an XLA fallback.
+
+Registers itself as the ``pallas_mapmajor`` conv implementation in the
+core layer-op registry (DESIGN.md §3); the planner's first cost rule is
+exactly this wrapper's :func:`fits_vmem` envelope.
 """
 from __future__ import annotations
 
@@ -11,8 +15,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.layer_ops import add_bias, register_conv_impl
 from ...core.layout import LANES, from_map_major, to_map_major
-from ...core.precision import ComputeMode
+from ...core.plan import IMPL_PALLAS
+from ...core.precision import ComputeMode, resolve_weight
 from .conv_mapmajor import conv_mapmajor
 from .ref import pack_weights
 
@@ -37,14 +43,10 @@ def _pad_amounts(h, k, s, padding):
 
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "mode", "u",
                                              "interpret"))
-def conv2d_mapmajor(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
-                    stride: int = 1, padding: str = "SAME",
-                    mode: ComputeMode = ComputeMode.RELAXED,
-                    u: int = LANES, interpret: bool = True) -> jnp.ndarray:
-    """NCHW in, NCHW out; map-major + Pallas OLP inside.
-
-    x: (N, Cin, H, W); w: (Cout, Cin, Kh, Kw); optional bias (Cout,).
-    """
+def _conv2d_mapmajor_pallas(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
+                            stride: int = 1, padding: str = "SAME",
+                            mode: ComputeMode = ComputeMode.RELAXED,
+                            u: int = LANES, interpret: bool = True) -> jnp.ndarray:
     n, cin, h, wdim = x.shape
     cout, _, kh, kw = w.shape
     h_out, ph0, ph1 = _pad_amounts(h, kh, stride, padding)
@@ -62,6 +64,37 @@ def conv2d_mapmajor(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
     return out
 
 
+def conv2d_mapmajor(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
+                    stride: int = 1, padding: str = "SAME",
+                    mode: ComputeMode = ComputeMode.RELAXED,
+                    u: int = LANES, interpret: bool = True) -> jnp.ndarray:
+    """NCHW in, NCHW out; map-major + Pallas OLP inside.
+
+    x: (N, Cin, H, W); w: (Cout, Cin, Kh, Kw); optional bias (Cout,).
+
+    Enforces the kernel's VMEM envelope: when one channel group's padded
+    input plane exceeds :data:`VMEM_INPUT_BUDGET`, the layer runs on the
+    fused-XLA OLP path instead (same semantics, no VMEM ceiling).  The
+    branch is resolved on static shapes, so it is jit-transparent.
+    """
+    _, _, h, wdim = x.shape
+    _, _, kh, _ = w.shape
+    if not fits_vmem(h, wdim, kh, stride, padding, u, mode):
+        return _conv2d_xla_fallback(x, w, b, stride=stride, padding=padding,
+                                    mode=mode)
+    return _conv2d_mapmajor_pallas(x, w, b, stride=stride, padding=padding,
+                                   mode=mode, u=u, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "mode"))
+def _conv2d_xla_fallback(x, w, b, *, stride, padding, mode):
+    from ...core.parallelism import conv_olp
+    out = conv_olp(x, w, stride=stride, padding=padding, mode=mode)
+    if b is not None:
+        out = out + b[None, :, None, None].astype(out.dtype)
+    return out
+
+
 def input_block_vmem_bytes(h_pad: int, w_pad: int, u: int,
                            mode: ComputeMode) -> int:
     return h_pad * w_pad * u * jnp.dtype(mode.operand_dtype).itemsize
@@ -69,7 +102,22 @@ def input_block_vmem_bytes(h_pad: int, w_pad: int, u: int,
 
 def fits_vmem(h: int, w: int, k: int, stride: int, padding: str, u: int,
               mode: ComputeMode) -> bool:
+    """True iff one (padded H x padded W x u) input block fits the budget."""
     _, p0, p1 = _pad_amounts(h, k, stride, padding)
     _, q0, q1 = _pad_amounts(w, k, stride, padding)
     return input_block_vmem_bytes(h + p0 + p1, w + q0 + q1, u, mode) \
         <= VMEM_INPUT_BUDGET
+
+
+@register_conv_impl(IMPL_PALLAS)
+def _conv_pallas_planned(layer, plan, params, x):
+    """Registry adapter: planned map-major conv (weights resolved per mode).
+
+    Compiles the kernel on TPU; anywhere else Pallas TPU kernels only run
+    interpreted (the planner routes here off-TPU only when forced).
+    """
+    w = resolve_weight(params["w"], plan.mode)
+    return conv2d_mapmajor(x, w, params.get("b") if layer.use_bias else None,
+                           stride=layer.stride, padding=layer.padding,
+                           mode=plan.mode, u=plan.u,
+                           interpret=jax.default_backend() != "tpu")

@@ -1,4 +1,8 @@
-"""Jit'd wrapper: padding to block multiples + int8 weight handling."""
+"""Jit'd wrapper: padding to block multiples + int8 weight handling.
+
+Registers itself as the ``pallas_mapmajor`` dense implementation in the
+core layer-op registry (DESIGN.md §3).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,6 +10,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.layer_ops import add_bias, register_dense_impl
+from ...core.plan import IMPL_PALLAS
 from ...core.precision import ComputeMode, QuantizedTensor
 from .matmul_mapmajor import matmul_mapmajor
 
@@ -40,3 +46,17 @@ def matmul(a, w, *, mode: ComputeMode = ComputeMode.RELAXED,
     a2 = a.reshape(-1, a.shape[-1])
     out = _matmul_padded(a2, w, mode, bm, bn, bk, interpret)
     return out.reshape(*lead, w.shape[1])
+
+
+@register_dense_impl(IMPL_PALLAS)
+def _dense_pallas_planned(layer, plan, params, x):
+    """Registry adapter: planned map-major matmul.
+
+    The plan's channel-group width ``u`` scales the K blocking — larger
+    groups amortize more operand loads per access (paper Eq. (2)), smaller
+    ones avoid padding waste on narrow layers.
+    """
+    bk = max(128, min(512, 4 * plan.u))
+    y = matmul(x.reshape(x.shape[0], -1), params["w"], mode=plan.mode, bk=bk,
+               interpret=jax.default_backend() != "tpu")
+    return add_bias(y, layer, params)

@@ -1,0 +1,122 @@
+"""Test-suite bootstrap.
+
+Two jobs:
+
+1. Pin JAX to CPU so kernel interpret-mode tests behave identically on any
+   host.
+2. Provide a *fallback* ``hypothesis`` implementation when the real package
+   is not installed (it is an optional test extra — see pyproject.toml).
+   The stub drives each ``@given`` test with a deterministic pseudo-random
+   sample of ``max_examples`` draws per strategy.  It implements exactly the
+   strategy surface this suite uses (``integers``, ``sampled_from``,
+   ``booleans``); anything else raises loudly so new tests either stay
+   within the subset or declare the real dependency.
+
+The stub is intentionally simpler than hypothesis: no shrinking, no
+database, no health checks.  Seeds derive from the test name, so failures
+reproduce run-to-run.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import sys
+import types
+import zlib
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _install_hypothesis_stub():
+    class _Strategy:
+        def __init__(self, draw, label):
+            self._draw = draw
+            self.label = label
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return f"stub_strategy({self.label})"
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         f"integers({min_value}, {max_value})")
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))],
+                         f"sampled_from({elements!r})")
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+    def settings(**kwargs):
+        def deco(fn):
+            fn._stub_settings = kwargs
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        for s in itertools.chain(arg_strategies, kw_strategies.values()):
+            if not isinstance(s, _Strategy):
+                raise TypeError(
+                    f"hypothesis stub only supports integers/sampled_from/"
+                    f"booleans strategies, got {s!r}; install the real "
+                    f"'hypothesis' package (pip install repro[test])")
+
+        def deco(fn):
+            conf = getattr(fn, "_stub_settings", {})
+            max_examples = conf.get("max_examples", 20)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(max_examples):
+                    drawn_args = tuple(s.draw(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in kw_strategies.items()}
+                    drawn_kw.update(kwargs)
+                    try:
+                        fn(*args, *drawn_args, **drawn_kw)
+                    except Exception as e:
+                        e.args = (f"[hypothesis-stub falsifying example: "
+                                  f"args={drawn_args} kwargs={drawn_kw}] "
+                                  + (str(e.args[0]) if e.args else ""),
+                                  *e.args[1:])
+                        raise
+            # Hide the drawn parameters from pytest's fixture resolution:
+            # the wrapper supplies them, so they must not look like fixtures.
+            sig = inspect.signature(fn)
+            names = list(sig.parameters)
+            drawn = set(names[:len(arg_strategies)]) | set(kw_strategies)
+            wrapper.__signature__ = sig.replace(
+                parameters=[p for n, p in sig.parameters.items()
+                            if n not in drawn])
+            wrapper.hypothesis_stub = True
+            return wrapper
+        return deco
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.sampled_from = sampled_from
+    st_mod.booleans = booleans
+
+    hyp_mod = types.ModuleType("hypothesis")
+    hyp_mod.given = given
+    hyp_mod.settings = settings
+    hyp_mod.strategies = st_mod
+    hyp_mod.__stub__ = True
+
+    sys.modules["hypothesis"] = hyp_mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401  (the real package, when available)
+except ModuleNotFoundError:
+    _install_hypothesis_stub()

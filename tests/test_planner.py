@@ -1,0 +1,246 @@
+"""Execution-planning subsystem: planner cost rules, registry dispatch,
+VMEM-envelope fallback, and policy parity (OLP/KLP/FLP/sequential)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.cnn import alexnet, googlenet, init_network_params, squeezenet
+from repro.core import (ComputeMode, ExecutionPlan, IMPL_PALLAS,
+                        IMPL_SEQUENTIAL, IMPL_XLA, LayerPlan,
+                        NetworkDescription, Parallelism, plan_network,
+                        run_network, synthesize, trace_shapes)
+from repro.kernels.conv_mapmajor import ops as conv_ops
+from repro.kernels.conv_mapmajor.ops import conv2d_mapmajor, fits_vmem
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _close(got, want, rtol=1e-4, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+# ------------------------------------------------------------ shape trace ---
+@pytest.mark.parametrize("builder,hw", [(alexnet, 67), (squeezenet, 64),
+                                        (googlenet, 64)])
+def test_trace_shapes_matches_execution(builder, hw):
+    net = builder(scale=0.1, num_classes=10, input_hw=hw)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jnp.zeros((2, 3, hw, hw))
+    from repro.core import collect_activations
+    acts = collect_activations(net, params, x)
+    shapes = trace_shapes(net)
+    for l in net.layers:
+        assert acts[l.name].shape[1:] == shapes[l.name], l.name
+
+
+# ----------------------------------------------------- VMEM envelope rule ---
+OVERSIZED_HW = 340            # 340*340*128 lanes * 2B (bf16) ≈ 29.6 MB > 24 MB
+
+
+def test_fits_vmem_oversized_extent():
+    assert not fits_vmem(OVERSIZED_HW, OVERSIZED_HW, 11, 4, "SAME", 128,
+                         ComputeMode.RELAXED)
+    assert fits_vmem(64, 64, 3, 1, "SAME", 128, ComputeMode.RELAXED)
+
+
+def test_planner_routes_over_vmem_conv_to_xla():
+    net = NetworkDescription("overvmem", (96, OVERSIZED_HW, OVERSIZED_HW))
+    net.conv("conv_big", 128, 11, stride=4, padding="SAME",
+             inputs=("input",))
+    plan = plan_network(net)
+    lp = plan.for_layer("conv_big")
+    assert lp.impl == IMPL_XLA
+    assert lp.reason.startswith("rule1"), lp.reason
+
+
+def test_conv2d_mapmajor_falls_back_above_envelope(monkeypatch):
+    """Regression: the wrapper must honor the VMEM envelope its docstring
+    promises — above it, the Pallas kernel must never be entered."""
+    def boom(*a, **k):
+        raise AssertionError("Pallas path entered above the VMEM envelope")
+    monkeypatch.setattr(conv_ops, "_conv2d_mapmajor_pallas", boom)
+
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          (1, 2, OVERSIZED_HW, OVERSIZED_HW))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 2, 11, 11)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (3,))
+    got = conv2d_mapmajor(x, w, b, stride=4, padding="SAME",
+                          mode=ComputeMode.RELAXED, u=128)
+    from repro.core import conv_olp
+    want = conv_olp(x, w, stride=4, padding="SAME", mode=ComputeMode.RELAXED)
+    want = want + b[None, :, None, None].astype(want.dtype)
+    _close(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_conv2d_mapmajor_uses_pallas_below_envelope(monkeypatch):
+    sentinel = {"called": False}
+    real = conv_ops._conv2d_mapmajor_pallas
+
+    def spy(*a, **k):
+        sentinel["called"] = True
+        return real(*a, **k)
+    monkeypatch.setattr(conv_ops, "_conv2d_mapmajor_pallas", spy)
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 12, 12))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 4, 3, 3)) * 0.1
+    conv2d_mapmajor(x, w, stride=1, padding="SAME",
+                    mode=ComputeMode.RELAXED, u=8)
+    assert sentinel["called"]
+
+
+# ---------------------------------------------------------- policy parity ---
+@pytest.mark.parametrize("stride", [1, 2])
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+@pytest.mark.parametrize("use_bias", [True, False])
+def test_policy_parity(stride, padding, use_bias):
+    """OLP, KLP, FLP, and the sequential baseline agree with the reference
+    across stride/padding/bias — one uniform plan per policy."""
+    net = NetworkDescription("parity", (5, 14, 14))
+    net.conv("c1", 7, 3, stride=stride, padding=padding, inputs=("input",),
+             use_bias=use_bias)
+    net.relu("r1")
+    params = init_network_params(net, jax.random.PRNGKey(7))
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 5, 14, 14))
+    ref = run_network(net, params, x)
+
+    for par in (Parallelism.OLP, Parallelism.KLP, Parallelism.FLP):
+        plan = ExecutionPlan.uniform(net, backend="xla", parallelism=par)
+        _close(run_network(net, params, x, plan=plan), ref)
+    seq = ExecutionPlan.uniform(net, backend="sequential")
+    _close(run_network(net, params, x, plan=seq), ref)
+
+
+# --------------------------------------------------------- planner golden ---
+@pytest.mark.parametrize("builder,hw", [(alexnet, 67), (squeezenet, 64),
+                                        (googlenet, 64)])
+def test_planned_executor_matches_reference(builder, hw):
+    net = builder(scale=0.1, num_classes=10, input_hw=hw)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, hw, hw))
+    ref = run_network(net, params, x)
+    plan = plan_network(net)
+    _close(run_network(net, params, x, plan=plan), ref, rtol=1e-5, atol=1e-5)
+
+
+def test_planner_routes_compute_bound_conv_to_pallas_and_matches():
+    """A wide compute-bound conv (AI above the ridge) must go to the
+    map-major Pallas kernel under an inexact mode — and still match the
+    reference within the mode's tolerance."""
+    from repro.core import PlannerConfig
+    net = NetworkDescription("wide", (128, 32, 32))
+    net.conv("cwide", 128, 3, stride=1, padding="SAME", inputs=("input",))
+    modes = {"cwide": ComputeMode.RELAXED}
+    plan = plan_network(net, modes=modes,
+                        config=PlannerConfig(allow_pallas=True))
+    lp = plan.for_layer("cwide")
+    assert lp.impl == IMPL_PALLAS, lp
+    assert lp.u == 128
+
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 32, 32))
+    ref = run_network(net, params, x, modes=modes)
+    _close(run_network(net, params, x, plan=plan), ref, rtol=2e-2, atol=2e-2)
+
+
+def test_planner_precise_mode_stays_off_pallas():
+    """Joint invariant at plan time: PRECISE layers take the XLA f32 path
+    even where the cost model would otherwise pick the Pallas kernel."""
+    from repro.core import PlannerConfig
+    net = NetworkDescription("wide", (128, 32, 32))
+    net.conv("cwide", 128, 3, stride=1, padding="SAME", inputs=("input",))
+    plan = plan_network(net, modes={"cwide": ComputeMode.PRECISE},
+                        config=PlannerConfig(allow_pallas=True))
+    lp = plan.for_layer("cwide")
+    assert lp.impl == IMPL_XLA
+    assert "precise" in lp.reason
+
+
+def test_planner_defaults_to_xla_off_tpu():
+    """Without a TPU the Pallas kernels only interpret — rule 3 must not
+    route to them by default (cpu test host)."""
+    net = NetworkDescription("wide", (128, 32, 32))
+    net.conv("cwide", 128, 3, stride=1, padding="SAME", inputs=("input",))
+    plan = plan_network(net, modes={"cwide": ComputeMode.RELAXED})
+    assert plan.for_layer("cwide").impl == IMPL_XLA
+    assert "interpret-only" in plan.for_layer("cwide").reason
+
+
+def test_planner_u_shrinks_for_narrow_layers():
+    net = NetworkDescription("narrow", (3, 16, 16))
+    net.conv("c1", 12, 3, inputs=("input",))
+    plan = plan_network(net)
+    assert plan.for_layer("c1").u == 16        # pow2 cover of max(3, 12)
+
+
+# ------------------------------------------------- plan artifact plumbing ---
+def test_legacy_flags_lower_to_uniform_plan():
+    net = NetworkDescription("tiny", (4, 8, 8))
+    net.conv("c1", 4, 3, inputs=("input",))
+    net.flatten("f")
+    net.dense("d1", 5)
+    plan = ExecutionPlan.uniform(net, backend="pallas",
+                                 parallelism=Parallelism.FLP)
+    # the map-major conv kernel implements OLP only: historical fallback
+    assert plan.for_layer("c1").impl == IMPL_XLA
+    assert plan.for_layer("c1").parallelism is Parallelism.FLP
+    assert plan.for_layer("d1").impl == IMPL_PALLAS
+    seq = ExecutionPlan.uniform(net, backend="sequential")
+    assert seq.for_layer("c1").impl == IMPL_SEQUENTIAL
+    with pytest.raises(ValueError):
+        ExecutionPlan.uniform(net, backend="renderscript")
+
+
+def test_run_network_rejects_plan_plus_flags():
+    net = NetworkDescription("tiny", (4, 8, 8))
+    net.conv("c1", 4, 3, inputs=("input",))
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jnp.zeros((1, 4, 8, 8))
+    with pytest.raises(ValueError):
+        run_network(net, params, x, plan=plan_network(net), backend="xla")
+    with pytest.raises(ValueError):
+        run_network(net, params, x, plan=plan_network(net), mapmajor_u=64)
+
+
+def test_synthesize_report_prints_plan_table():
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    prog = synthesize(net, params, forced_mode=ComputeMode.RELAXED)
+    rep = prog.report()
+    assert "execution plan:" in rep
+    assert "impl" in rep and "policy" in rep
+    for l in net.param_layers[:3]:
+        assert l.name in rep
+    assert prog.plan.origin == "planner"
+
+
+def test_modes_overlay_plan():
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    plan = plan_network(net)
+    modes = {n: ComputeMode.IMPRECISE for n in net.inexactable_layers}
+    overlaid = plan.with_modes(modes)
+    for n in net.inexactable_layers:
+        assert overlaid.for_layer(n).mode is ComputeMode.IMPRECISE
+        # impl choice untouched by the overlay
+        assert overlaid.for_layer(n).impl == plan.for_layer(n).impl
+
+
+def test_joint_refinement_moves_precise_layer_off_pallas():
+    """refine_plan: a layer pinned PRECISE must leave the Pallas kernel."""
+    from repro.core import refine_plan
+    net = NetworkDescription("joint", (4, 8, 8))
+    net.conv("c1", 4, 3, inputs=("input",))
+    plan = ExecutionPlan(net.name, {
+        "c1": LayerPlan(impl=IMPL_PALLAS, mode=ComputeMode.PRECISE, u=8)})
+
+    # force the selector to keep c1 PRECISE: any inexactness drops accuracy
+    def evaluate_plan(p):
+        return 1.0 if p.for_layer("c1").mode is ComputeMode.PRECISE else 0.0
+
+    report, refined = refine_plan(plan, ["c1"], evaluate_plan,
+                                  max_degradation=0.0)
+    assert report.modes["c1"] is ComputeMode.PRECISE
+    assert refined.for_layer("c1").impl == IMPL_XLA
+    assert "joint" in refined.for_layer("c1").reason
