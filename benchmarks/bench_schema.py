@@ -1,0 +1,107 @@
+"""BENCH_*.json schema: the contract between benchmarks and CI.
+
+Every benchmark that feeds the perf trajectory emits one JSON document:
+
+  {
+    "benchmark": "<suite name>",
+    "schema_version": 1,
+    "config": {...},                      # how the numbers were produced
+    "metrics": {"<name>": <finite number>, ...},   # headline numbers
+    "rows": [{"name": "...", "value": <number>}, ...]   # optional detail
+  }
+
+``REQUIRED_METRICS`` pins the headline metrics each suite must publish, so
+a refactor that silently drops (say) p95 latency fails CI instead of
+producing a hole in the trend charts.  Validate from the command line:
+
+  python -m benchmarks.bench_schema BENCH_serving.json [more.json ...]
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+from typing import Any, Dict, List
+
+SCHEMA_VERSION = 1
+
+#: Headline metrics each known suite must emit (others may add freely).
+REQUIRED_METRICS: Dict[str, List[str]] = {
+    "serving_throughput": ["sustained_imgs_per_s", "latency_p50_ms",
+                           "latency_p95_ms"],
+    "table3_vs_klp_flp": ["olp_over_flp_speedup"],
+}
+
+
+class SchemaError(ValueError):
+    pass
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise SchemaError(msg)
+
+
+def _finite_number(v: Any) -> bool:
+    return (isinstance(v, (int, float)) and not isinstance(v, bool)
+            and math.isfinite(v))
+
+
+def validate_bench(doc: Any) -> None:
+    """Raise :class:`SchemaError` unless ``doc`` is a valid BENCH document."""
+    _require(isinstance(doc, dict), "document must be a JSON object")
+    name = doc.get("benchmark")
+    _require(isinstance(name, str) and bool(name),
+             "'benchmark' must be a non-empty string")
+    _require(doc.get("schema_version") == SCHEMA_VERSION,
+             f"'schema_version' must be {SCHEMA_VERSION}, "
+             f"got {doc.get('schema_version')!r}")
+    metrics = doc.get("metrics")
+    _require(isinstance(metrics, dict) and bool(metrics),
+             "'metrics' must be a non-empty object")
+    for k, v in metrics.items():
+        _require(isinstance(k, str) and bool(k),
+                 "metric names must be non-empty strings")
+        _require(_finite_number(v),
+                 f"metric {k!r} must be a finite number, got {v!r}")
+    for k in REQUIRED_METRICS.get(name, []):
+        _require(k in metrics, f"suite {name!r} must emit metric {k!r}")
+    if "config" in doc:
+        _require(isinstance(doc["config"], dict), "'config' must be an object")
+    if "rows" in doc:
+        _require(isinstance(doc["rows"], list), "'rows' must be an array")
+        for i, row in enumerate(doc["rows"]):
+            _require(isinstance(row, dict), f"rows[{i}] must be an object")
+            _require(isinstance(row.get("name"), str) and bool(row["name"]),
+                     f"rows[{i}].name must be a non-empty string")
+            _require(_finite_number(row.get("value")),
+                     f"rows[{i}].value must be a finite number")
+
+
+def write_bench(path: str, doc: Dict[str, Any]) -> None:
+    """Validate then write — a benchmark can never emit an invalid file."""
+    validate_bench(doc)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.bench_schema BENCH.json [...]",
+              file=sys.stderr)
+        return 2
+    bad = 0
+    for path in argv:
+        try:
+            with open(path) as f:
+                validate_bench(json.load(f))
+            print(f"{path}: ok")
+        except (OSError, json.JSONDecodeError, SchemaError) as e:
+            print(f"{path}: INVALID — {e}", file=sys.stderr)
+            bad += 1
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

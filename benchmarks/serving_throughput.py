@@ -1,0 +1,109 @@
+"""Serving benchmark: sustained throughput + latency under offered load.
+
+Single-shot latency (tables 1-3) and sustained-load behavior diverge on
+real systems — this suite measures the latter: it synthesizes a CNN once,
+then drives the :class:`~repro.serving.SynthesisServer` through
+:func:`repro.serving.run_offered_load` (open-loop arrivals, every batch
+bucket pre-warmed so no XLA compile lands in the measured window) and
+reports sustained img/s, latency percentiles, and the plan/program-cache
+counters.  Output is a schema-validated ``BENCH_serving.json``
+(benchmarks/bench_schema.py) that CI uploads as the perf-trajectory
+artifact.
+
+  PYTHONPATH=src python -m benchmarks.serving_throughput --smoke
+  PYTHONPATH=src python -m benchmarks.serving_throughput \
+      --net squeezenet --requests 256 --rate 100 --max-batch 8
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict
+
+import jax
+
+from repro.cnn import WORKLOADS, init_network_params
+from repro.core import ComputeMode, synthesize
+from repro.serving import FlushPolicy, run_offered_load
+
+from .bench_schema import SCHEMA_VERSION, write_bench
+
+
+def run(net_name: str = "squeezenet", *, scale: float = 0.08,
+        input_hw: int = 64, num_classes: int = 10, requests: int = 128,
+        rate: float = 0.0, max_batch: int = 8, max_delay_ms: float = 2.0,
+        mode: ComputeMode = ComputeMode.RELAXED, seed: int = 0) -> Dict:
+    """Run the offered-load experiment and return the BENCH document."""
+    net = WORKLOADS[net_name](scale=scale, num_classes=num_classes,
+                              input_hw=input_hw)
+    params = init_network_params(net, jax.random.PRNGKey(seed))
+    program = synthesize(net, params, forced_mode=mode)
+
+    report = run_offered_load(
+        program, requests=requests, rate=rate,
+        policy=FlushPolicy(max_batch=max_batch,
+                           max_delay_s=max_delay_ms / 1e3),
+        seed=seed)
+
+    cache, srv = report.cache_stats, report.server_stats
+    return {
+        "benchmark": "serving_throughput",
+        "schema_version": SCHEMA_VERSION,
+        "config": {
+            "net": net.name, "scale": scale, "input_hw": input_hw,
+            "requests": requests, "offered_rate_rps": rate,
+            "max_batch": max_batch, "max_delay_ms": max_delay_ms,
+            "mode": mode.value, "backend": jax.default_backend(),
+            "program_fingerprint": program.fingerprint(),
+        },
+        "metrics": {
+            "sustained_imgs_per_s": report.sustained_per_s,
+            "latency_p50_ms": report.latency_ms(50),
+            "latency_p95_ms": report.latency_ms(95),
+            "latency_mean_ms": report.latency_mean_ms,
+            "latency_max_ms": report.latencies_ms[-1],
+            "wall_seconds": report.wall_seconds,
+            "batches": srv["batches"],
+            "padding_fraction": srv["padding_fraction"],
+            "stage_d_compiles": cache["stage_d_compiles"],
+            "stage_d_seconds": cache["stage_d_seconds"],
+            "cache_hit_rate": cache["hit_rate"],
+            "synthesis_seconds": program.synthesis_seconds,
+        },
+        "rows": [{"name": f"bucket_{b}_batches", "value": n}
+                 for b, n in sorted(report.bucket_counts.items())],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast configuration for CI")
+    ap.add_argument("--net", default="squeezenet", choices=sorted(WORKLOADS))
+    ap.add_argument("--scale", type=float, default=0.08)
+    ap.add_argument("--input-hw", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=128)
+    ap.add_argument("--rate", type=float, default=0.0)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--mode", default="relaxed",
+                    choices=[m.value for m in ComputeMode])
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.requests = min(args.requests, 48)
+        args.max_batch = min(args.max_batch, 4)
+
+    doc = run(args.net, scale=args.scale, input_hw=args.input_hw,
+              requests=args.requests, rate=args.rate,
+              max_batch=args.max_batch, max_delay_ms=args.max_delay_ms,
+              mode=ComputeMode(args.mode))
+    write_bench(args.out, doc)
+    m = doc["metrics"]
+    print(f"wrote {args.out}: {m['sustained_imgs_per_s']:.1f} img/s, "
+          f"p50 {m['latency_p50_ms']:.2f} ms, p95 {m['latency_p95_ms']:.2f} ms,"
+          f" {m['stage_d_compiles']:.0f} Stage-D compiles")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,16 +6,24 @@ exact and 11.47X faster imprecise, on AlexNet.  Our stand-ins: FLP and KLP
 implementations (materialized partial tensors + reduction — the cost OLP
 avoids) vs OLP, exact and imprecise, per representative conv layer and on
 the scaled AlexNet.
+
+As a module (from benchmarks.run) it prints CSV rows; as a script it also
+emits a schema-validated BENCH document:
+
+  PYTHONPATH=src python -m benchmarks.table3_vs_klp_flp --dry-run
 """
 from __future__ import annotations
 
+import argparse
+from typing import List, Tuple
+
 import jax
-import jax.numpy as jnp
 
 from repro.cnn import alexnet, init_network_params
 from repro.core import (ComputeMode, ExecutionPlan, Parallelism, plan_network,
                         run_network)
 
+from .bench_schema import SCHEMA_VERSION, write_bench
 from .common import bench, csv_row
 
 # representative conv layer geometries (scaled AlexNet conv2/conv3)
@@ -25,8 +33,10 @@ LAYERS = [
 ]
 
 
-def run(reps: int = 8):
-    rows = []
+def measure(reps: int = 8, *, scale: float = 0.25,
+            input_hw: int = 115) -> List[Tuple[str, float]]:
+    """All Table-III timings as (name, us_per_call) pairs."""
+    out: List[Tuple[str, float]] = []
     from repro.core.parallelism import conv2d
     for lname, xshape, wshape, stride in LAYERS:
         x = jax.random.normal(jax.random.PRNGKey(0), xshape)
@@ -36,13 +46,13 @@ def run(reps: int = 8):
                 xx, ww, stride=stride, padding="SAME", mode=ComputeMode.RELAXED,
                 parallelism=par))
             t = bench(f, x, w, reps=reps)
-            rows.append(csv_row(f"table3.layer.{lname}.{par.value}", t * 1e6))
+            out.append((f"table3.layer.{lname}.{par.value}", t * 1e6))
 
     # whole-network: OLP vs FLP (the CNNDroid-style policy), exact + imprecise,
     # each policy expressed as a uniform execution plan.
-    net = alexnet(scale=0.25, num_classes=100, input_hw=115)
+    net = alexnet(scale=scale, num_classes=100, input_hw=input_hw)
     params = init_network_params(net, jax.random.PRNGKey(0))
-    x = jax.random.normal(jax.random.PRNGKey(2), (1, 3, 115, 115))
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 3, input_hw, input_hw))
     for par in (Parallelism.OLP, Parallelism.FLP):
         for mode in (ComputeMode.PRECISE, ComputeMode.IMPRECISE):
             modes = {n: mode for n in net.inexactable_layers}
@@ -51,8 +61,7 @@ def run(reps: int = 8):
             f = jax.jit(lambda xx, plan=plan: run_network(
                 net, params, xx, plan=plan))
             t = bench(f, x, reps=reps)
-            rows.append(csv_row(f"table3.alexnet.{par.value}.{mode.value}",
-                                t * 1e6))
+            out.append((f"table3.alexnet.{par.value}.{mode.value}", t * 1e6))
 
     # the planner's own per-layer assignment, for comparison with the
     # uniform policies above
@@ -62,9 +71,50 @@ def run(reps: int = 8):
         f = jax.jit(lambda xx, plan=plan: run_network(net, params, xx,
                                                       plan=plan))
         t = bench(f, x, reps=reps)
-        rows.append(csv_row(f"table3.alexnet.planned.{mode.value}", t * 1e6))
-    return rows
+        out.append((f"table3.alexnet.planned.{mode.value}", t * 1e6))
+    return out
+
+
+def run(reps: int = 8) -> List[str]:
+    return [csv_row(name, us) for name, us in measure(reps)]
+
+
+def to_bench_doc(pairs: List[Tuple[str, float]], reps: int) -> dict:
+    us = dict(pairs)
+    olp = us["table3.alexnet.olp.precise"]
+    flp = us["table3.alexnet.flp.precise"]
+    olp_i = us["table3.alexnet.olp.imprecise"]
+    flp_i = us["table3.alexnet.flp.imprecise"]
+    return {
+        "benchmark": "table3_vs_klp_flp",
+        "schema_version": SCHEMA_VERSION,
+        "config": {"reps": reps, "backend": jax.default_backend()},
+        "metrics": {
+            "olp_over_flp_speedup": flp / olp,
+            "olp_over_flp_speedup_imprecise": flp_i / olp_i,
+            "alexnet_olp_precise_us": olp,
+            "alexnet_olp_imprecise_us": olp_i,
+        },
+        "rows": [{"name": n, "value": v} for n, v in pairs],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="minimal reps: validates the pipeline + schema, "
+                         "numbers are indicative only")
+    ap.add_argument("--reps", type=int, default=8)
+    ap.add_argument("--out", default="BENCH_table3.json")
+    args = ap.parse_args()
+    reps = 2 if args.dry_run else args.reps
+
+    pairs = measure(reps)
+    for name, us in pairs:
+        print(csv_row(name, us))
+    write_bench(args.out, to_bench_doc(pairs, reps))
+    print(f"wrote {args.out}")
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

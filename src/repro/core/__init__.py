@@ -28,7 +28,7 @@ from .planner import (PlannerConfig, autotune_plan, plan_network,
 from .precision import (MODES_FASTEST_FIRST, ComputeMode, QuantizedTensor,
                         mode_dot, mode_tolerance, prepare_operand,
                         prepare_weight, quantize_int8, resolve_weight)
-from .synthesizer import SynthesizedProgram, synthesize
+from .synthesizer import BatchProgram, SynthesizedProgram, synthesize
 
 __all__ = [
     "LANES", "from_map_major", "mapmajor_scatter_order", "num_groups",
@@ -44,5 +44,5 @@ __all__ = [
     "PlannerConfig", "autotune_plan", "plan_network", "trace_shapes",
     "MODES_FASTEST_FIRST", "ComputeMode", "QuantizedTensor", "mode_dot",
     "mode_tolerance", "prepare_operand", "prepare_weight", "quantize_int8",
-    "resolve_weight", "SynthesizedProgram", "synthesize",
+    "resolve_weight", "BatchProgram", "SynthesizedProgram", "synthesize",
 ]

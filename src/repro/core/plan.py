@@ -21,6 +21,7 @@ working unchanged.  See DESIGN.md §3.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field, replace
 from typing import TYPE_CHECKING, Dict, Iterator, Mapping, Optional, Tuple
 
@@ -49,6 +50,13 @@ class LayerPlan:
 
     def with_mode(self, mode: ComputeMode) -> "LayerPlan":
         return replace(self, mode=mode)
+
+    @property
+    def cache_key(self) -> Tuple[str, str, str, int]:
+        """The execution-relevant projection of this plan.  ``reason`` is
+        documentation, not dispatch — two plans that differ only in their
+        cost-rule notes compile to the same program."""
+        return (self.impl, self.parallelism.value, self.mode.value, self.u)
 
     def describe(self) -> str:
         bits = [self.impl, self.parallelism.value, self.mode.value,
@@ -91,6 +99,25 @@ class ExecutionPlan:
     @property
     def modes(self) -> Dict[str, ComputeMode]:
         return {n: p.mode for n, p in self.layers.items()}
+
+    # -- identity -----------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Stable content hash of everything that changes the compiled
+        program: the network name and each layer's ``cache_key``.
+
+        ``origin`` and per-layer ``reason`` strings are deliberately
+        excluded — they describe *why* a plan was chosen, not *what* it
+        executes, so a planner plan and a hand-written plan with identical
+        dispatch share a fingerprint (and therefore share ProgramCache
+        entries — see serving/program_cache.py).  Layer order does not
+        matter: entries are hashed sorted by name.
+        """
+        h = hashlib.sha256()
+        h.update(self.net_name.encode())
+        for name in sorted(self.layers):
+            impl, par, mode, u = self.layers[name].cache_key
+            h.update(f"|{name}={impl},{par},{mode},{u}".encode())
+        return h.hexdigest()[:16]
 
     # -- reporting ----------------------------------------------------------
     def table(self) -> str:

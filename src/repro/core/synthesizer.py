@@ -16,13 +16,21 @@ Stages:
   C. *Inexact-computing analysis* (§IV-C): run the mode selector on the
      validation set under the user's accuracy constraint, evaluating under
      the planned implementations (joint mode+impl refinement).
-  D. *Software synthesis*: emit the final program — here an XLA-compiled,
-     jitted callable with the per-layer plan baked in, plus a
-     human-readable synthesis report (the analogue of the generated
-     RenderScript source).
+  D. *Software synthesis*: emit the final program — here an XLA-compiled
+     callable with the per-layer plan baked in, plus a human-readable
+     synthesis report (the analogue of the generated RenderScript source).
+
+Stages A–C are *plan-time*: they depend on the network, weights, and
+validation set but not on the serving batch shape.  Stage D is *shape
+specialization*: XLA compiles for one concrete input shape.  The split is
+explicit in the artifact — :meth:`SynthesizedProgram.for_batch` re-runs
+only Stage D (an AOT compile for ``(batch, C, H, W)``), so a serving layer
+can synthesize once per network and specialize per batch bucket (see
+serving/program_cache.py and DESIGN.md §6).
 """
 from __future__ import annotations
 
+import hashlib
 import time
 import warnings
 from dataclasses import dataclass, field
@@ -30,6 +38,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .layout import LANES, weights_to_map_major
 from .mode_selector import ModeSelectionReport, refine_plan
@@ -41,16 +50,105 @@ from .precision import ComputeMode, prepare_weight
 
 
 @dataclass
+class BatchProgram:
+    """One Stage-D artifact: an AOT-compiled executable for a fixed batch.
+
+    This is the closest analogue of the paper's emitted RenderScript source:
+    every shape is static, XLA has finished compiling, and ``__call__`` only
+    executes.  Produced by :meth:`SynthesizedProgram.for_batch`; cached and
+    reused across requests by ``serving.ProgramCache``.
+    """
+    batch: int
+    input_shape: Tuple[int, ...]              # full (B, C, H, W)
+    plan_fingerprint: str
+    compile_seconds: float
+    _compiled: Callable[[jnp.ndarray], jnp.ndarray]
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        if tuple(x.shape) != self.input_shape:
+            raise ValueError(
+                f"BatchProgram compiled for {self.input_shape}, got "
+                f"{tuple(x.shape)}; use SynthesizedProgram.for_batch "
+                f"({x.shape[0]}) or the serving batcher")
+        return self._compiled(x)
+
+
+@dataclass
 class SynthesizedProgram:
-    """The synthesis artifact: a compiled inference program + metadata."""
+    """The plan-time synthesis artifact (Stages A–C baked in) + metadata.
+
+    ``infer`` is the shape-polymorphic entry point (a ``jax.jit`` that
+    retraces per input shape — convenient for scripts and tests);
+    :meth:`for_batch` is the explicit Stage-D entry point serving uses: it
+    AOT-compiles the program for one fixed batch and records the compile in
+    ``stage_d_compiles``.
+    """
     net: NetworkDescription
-    infer: Callable[[jnp.ndarray], jnp.ndarray]   # jitted, plan baked in
     plan: ExecutionPlan
     modes: Dict[str, ComputeMode]
     parallelism: Parallelism
     mode_report: Optional[ModeSelectionReport]
     synthesis_seconds: float
+    prepared: Dict[str, Dict[str, jnp.ndarray]] = field(repr=False,
+                                                        default_factory=dict)
     vector_width: int = LANES
+    input_dtype: jnp.dtype = jnp.float32
+    stage_d_compiles: int = 0
+    _infer: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = \
+        field(default=None, repr=False)
+    _params_digest: Optional[str] = field(default=None, repr=False)
+
+    def _forward(self, x: jnp.ndarray) -> jnp.ndarray:
+        return run_network(self.net, self.prepared, x, plan=self.plan)
+
+    def params_digest(self) -> str:
+        """Content hash of the prepared weights (Stage B's output).
+
+        Cached after the first call — O(model size) once.  Part of
+        :meth:`fingerprint` so two programs sharing a network name and plan
+        but carrying different weights (a retrain, a different quantization)
+        can never share compiled executables."""
+        if self._params_digest is None:
+            h = hashlib.sha256()
+            for name in sorted(self.prepared):
+                h.update(name.encode())
+                for leaf in jax.tree_util.tree_leaves(self.prepared[name]):
+                    arr = np.asarray(leaf)
+                    h.update(str(arr.dtype).encode())
+                    h.update(str(arr.shape).encode())
+                    h.update(arr.tobytes())
+            self._params_digest = h.hexdigest()[:16]
+        return self._params_digest
+
+    def fingerprint(self) -> str:
+        """Program identity for caching: plan dispatch content + weights."""
+        return f"{self.plan.fingerprint()}-{self.params_digest()}"
+
+    @property
+    def infer(self) -> Callable[[jnp.ndarray], jnp.ndarray]:
+        """Jitted forward pass with the plan baked in (retraces per shape)."""
+        if self._infer is None:
+            self._infer = jax.jit(self._forward)
+        return self._infer
+
+    def for_batch(self, batch: int) -> BatchProgram:
+        """Stage D alone: AOT-compile this program for a fixed batch size.
+
+        Stages A–C are already done — this re-specializes the *same* plan
+        and prepared weights for a new leading dimension, which is exactly
+        what the serving layer's power-of-two buckets need.
+        """
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        shape = (batch, *self.net.input_shape)
+        t0 = time.time()
+        compiled = jax.jit(self._forward).lower(
+            jax.ShapeDtypeStruct(shape, self.input_dtype)).compile()
+        self.stage_d_compiles += 1
+        return BatchProgram(batch=batch, input_shape=shape,
+                            plan_fingerprint=self.plan.fingerprint(),
+                            compile_seconds=time.time() - t0,
+                            _compiled=compiled)
 
     def report(self) -> str:
         lines = [f"== Cappuccino synthesis report: {self.net.name} ==",
@@ -181,19 +279,18 @@ def synthesize(net: NetworkDescription,
             p["b"] = p["b"].astype(jnp.float32)
         prepared[l.name] = p
 
-    # Stage D: emit the compiled program with the plan baked in.
+    # Stage D is deferred: the returned program carries the plan + prepared
+    # weights, and compiles on demand — shape-polymorphically via .infer, or
+    # per fixed batch via .for_batch (what the serving ProgramCache calls).
     final_plan = plan
-
-    def _infer(x):
-        return run_network(net, prepared, x, plan=final_plan)
-    infer = jax.jit(_infer)
 
     # Legacy metadata: the dominant thread policy across parametric layers.
     policies = {final_plan.for_layer(l.name).parallelism
                 for l in net.param_layers}
     thread_policy = policies.pop() if len(policies) == 1 else Parallelism.OLP
 
-    return SynthesizedProgram(net=net, infer=infer, plan=final_plan,
+    return SynthesizedProgram(net=net, plan=final_plan,
                               modes=modes, parallelism=thread_policy,
                               mode_report=mode_report,
-                              synthesis_seconds=time.time() - t0)
+                              synthesis_seconds=time.time() - t0,
+                              prepared=prepared)

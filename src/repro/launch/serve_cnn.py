@@ -1,0 +1,67 @@
+"""CNN serving launcher: synthesize once, serve a stream of single images.
+
+  PYTHONPATH=src python -m repro.launch.serve_cnn --net squeezenet \
+      --scale 0.08 --input-hw 64 --requests 64 --max-batch 8 \
+      --max-delay-ms 2 --rate 200
+
+Synthesizes the network (Stages A–C once), then drives the
+:class:`~repro.serving.SynthesisServer` with an open-loop stream of
+``--requests`` single images at ``--rate`` req/s (0 = back-to-back) via
+:func:`repro.serving.run_offered_load`, and prints sustained throughput,
+latency percentiles, and the plan/program-cache counters — Stage D
+compiles exactly ``log2(max_batch) + 1`` times (pre-warmed out-of-band).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.cnn import WORKLOADS, init_network_params
+from repro.core import ComputeMode, synthesize
+from repro.serving import FlushPolicy, run_offered_load
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default="squeezenet", choices=sorted(WORKLOADS))
+    ap.add_argument("--scale", type=float, default=0.08)
+    ap.add_argument("--input-hw", type=int, default=64)
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="offered load in req/s; 0 = back-to-back")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--mode", default="relaxed",
+                    choices=[m.value for m in ComputeMode])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    net = WORKLOADS[args.net](scale=args.scale, num_classes=args.classes,
+                              input_hw=args.input_hw)
+    params = init_network_params(net, jax.random.PRNGKey(args.seed))
+    print(f"synthesizing {net.name} ({len(net.layers)} layers)...")
+    program = synthesize(net, params, forced_mode=ComputeMode(args.mode))
+    print(f"  stages A-C in {program.synthesis_seconds:.2f}s, "
+          f"program {program.fingerprint()}")
+
+    report = run_offered_load(
+        program, requests=args.requests, rate=args.rate,
+        policy=FlushPolicy(max_batch=args.max_batch,
+                           max_delay_s=args.max_delay_ms / 1e3),
+        seed=args.seed)
+
+    srv, cache = report.server_stats, report.cache_stats
+    print(f"served {report.requests} requests in {report.wall_seconds:.3f}s "
+          f"({report.sustained_per_s:.1f} img/s sustained)")
+    print(f"latency ms: p50 {report.latency_ms(50):.2f}  "
+          f"p95 {report.latency_ms(95):.2f}  max {report.latencies_ms[-1]:.2f}")
+    print(f"batches: {srv['batches']}  buckets {srv['bucket_counts']}  "
+          f"padding {srv['padding_fraction']:.1%}")
+    print(f"program cache: {cache['stage_d_compiles']:.0f} Stage-D compiles "
+          f"({cache['stage_d_seconds']:.2f}s), hit rate {cache['hit_rate']:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,25 @@
-from .engine import GenerationResult, ServingEngine
+"""Serving layer: batched inference over synthesized programs.
 
-__all__ = ["ServingEngine", "GenerationResult"]
+Two engines live here:
+
+- :class:`ServingEngine` — the LLM prefill/decode loop (transformer
+  workloads);
+- :class:`SynthesisServer` — batched serving of Cappuccino-synthesized CNN
+  programs: a :class:`DynamicBatcher` coalesces single-image requests into
+  power-of-two buckets, and a :class:`ProgramCache` keeps one Stage-D
+  compile per ``(network, bucket, plan fingerprint)``.  See DESIGN.md §6.
+"""
+from .batcher import (Bucket, DynamicBatcher, FlushPolicy, ServingFuture,
+                      pow2_bucket)
+from .engine import GenerationResult, ServingEngine
+from .loadgen import LoadReport, percentile, run_offered_load, warm_buckets
+from .program_cache import CacheStats, ProgramCache
+from .server import ServerStats, SynthesisServer
+
+__all__ = [
+    "Bucket", "DynamicBatcher", "FlushPolicy", "ServingFuture", "pow2_bucket",
+    "ServingEngine", "GenerationResult",
+    "LoadReport", "percentile", "run_offered_load", "warm_buckets",
+    "CacheStats", "ProgramCache",
+    "ServerStats", "SynthesisServer",
+]

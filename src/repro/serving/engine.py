@@ -66,7 +66,13 @@ class ServingEngine:
 
         out: List[np.ndarray] = []
         finished = np.zeros((b,), bool)
-        tok = self._sample(logits, temperature, key)
+        # Every sample gets its own key folded from the caller's base key:
+        # step 0 is the prefill-derived first token, step i+1 the token after
+        # decode step i.  Folding *before* the first _sample call keeps the
+        # raw user key out of sampling, so a caller reusing it elsewhere
+        # (or across generate() calls) never duplicates our draws.
+        step_key = (None if key is None else jax.random.fold_in(key, 0))
+        tok = self._sample(logits, temperature, step_key)
         t0 = time.perf_counter()
         for i in range(max_new_tokens):
             out.append(np.asarray(tok))
@@ -78,10 +84,10 @@ class ServingEngine:
                 break
             logits, caches = self._decode(self.params, caches, tok,
                                           jnp.int32(s + i))
-            if key is not None:
-                key = jax.random.fold_in(key, i)
+            step_key = (None if key is None
+                        else jax.random.fold_in(key, i + 1))
             tok = self._sample(logits[:, None] if logits.ndim == 2 else logits,
-                               temperature, key)
+                               temperature, step_key)
         jax.block_until_ready(caches)
         t_decode = time.perf_counter() - t0
         return GenerationResult(tokens=np.concatenate(out, axis=1),

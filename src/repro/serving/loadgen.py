@@ -1,0 +1,104 @@
+"""Open-loop load generation against a :class:`SynthesisServer`.
+
+One implementation of the serving experiment shared by the CLI launcher
+(``repro.launch.serve_cnn``) and the benchmark suite
+(``benchmarks.serving_throughput``): pre-warm every power-of-two bucket,
+submit single-image requests at an offered rate (0 = back-to-back), wait
+for completion, and report sustained throughput + latency percentiles
+alongside the server/cache counters.
+
+Open loop means arrivals are paced by the clock, not by completions — the
+regime where sustained-load behavior diverges from single-shot latency
+(queueing shows up in p95 as soon as offered load exceeds capacity).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.synthesizer import SynthesizedProgram
+from .batcher import FlushPolicy
+from .program_cache import ProgramCache
+from .server import SynthesisServer
+
+
+def percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile of an already-sorted sample."""
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1,
+              int(round(q / 100 * (len(sorted_vals) - 1))))
+    return sorted_vals[idx]
+
+
+def warm_buckets(cache: ProgramCache, program: SynthesizedProgram,
+                 max_batch: int) -> None:
+    """Compile Stage D for every bucket the batcher can release (1, 2, ...,
+    max_batch) so no XLA compile lands inside a measured window."""
+    b = 1
+    while b <= max_batch:
+        cache.get(program, b)
+        b *= 2
+
+
+@dataclass
+class LoadReport:
+    """What one offered-load run produced."""
+    requests: int
+    offered_rate_rps: float
+    wall_seconds: float
+    latencies_ms: List[float]              # sorted ascending
+    server_stats: Dict[str, object]        # ServerStats.as_dict()
+    cache_stats: Dict[str, float]          # CacheStats.as_dict()
+    bucket_counts: Dict[int, int]
+
+    @property
+    def sustained_per_s(self) -> float:
+        return self.requests / self.wall_seconds
+
+    def latency_ms(self, q: float) -> float:
+        return percentile(self.latencies_ms, q)
+
+    @property
+    def latency_mean_ms(self) -> float:
+        return (sum(self.latencies_ms) / len(self.latencies_ms)
+                if self.latencies_ms else float("nan"))
+
+
+def run_offered_load(program: SynthesizedProgram, *, requests: int,
+                     rate: float = 0.0,
+                     policy: Optional[FlushPolicy] = None,
+                     cache: Optional[ProgramCache] = None,
+                     seed: int = 0, warm: bool = True,
+                     timeout_s: float = 300.0) -> LoadReport:
+    """Drive ``requests`` single images through a fresh server."""
+    policy = policy or FlushPolicy()
+    server = SynthesisServer(program, cache=cache, policy=policy)
+    if warm:
+        warm_buckets(server.cache, program, policy.max_batch)
+
+    rng = np.random.default_rng(seed)
+    images = rng.standard_normal(
+        (requests, *program.net.input_shape)).astype(np.float32)
+
+    with server:
+        gap = 1.0 / rate if rate > 0 else 0.0
+        t0 = time.perf_counter()
+        futures = []
+        for i in range(requests):
+            futures.append(server.submit(images[i]))
+            if gap:
+                time.sleep(max(0.0, t0 + (i + 1) * gap - time.perf_counter()))
+        for f in futures:
+            f.result(timeout=timeout_s)
+        wall = time.perf_counter() - t0
+
+    return LoadReport(
+        requests=requests, offered_rate_rps=rate, wall_seconds=wall,
+        latencies_ms=sorted(f.latency_s * 1e3 for f in futures),
+        server_stats=server.stats.as_dict(),
+        cache_stats=server.cache.stats.as_dict(),
+        bucket_counts=dict(server.stats.bucket_counts))

@@ -1,0 +1,135 @@
+"""Plan/program cache: synthesis runs once, Stage D once per batch bucket.
+
+Two-level cache mirroring the synthesizer's plan-time / shape-specialize
+split (DESIGN.md §6):
+
+  level 1  ``(network, program fingerprint)`` ->
+           :class:`SynthesizedProgram` — Stages A–C.  Admitted once per
+           network (synthesis is seconds of work: planning, mode search
+           over the validation set, weight preparation).
+  level 2  ``(network, batch bucket, program fingerprint)`` ->
+           :class:`BatchProgram` — Stage D, an AOT XLA compile for one
+           fixed batch shape.  Power-of-two buckets keep this level's
+           cardinality at ``log2(max_batch) + 1`` per program.
+
+The program fingerprint (``SynthesizedProgram.fingerprint``) is the plan's
+dispatch-content hash (``ExecutionPlan.fingerprint``) plus a digest of the
+prepared weights: re-synthesizing a network under the same planner decision
+and weights reuses every compiled bucket, while any plan change (a
+re-routed layer, a different compute mode) or weight change (a retrain)
+gets fresh executables — compiled programs close over their weights, so
+weights must be part of the key.
+
+``CacheStats`` records hits/misses/compiles — the round-trip acceptance
+test and the serving benchmark both read them.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Tuple
+
+from ..core.synthesizer import BatchProgram, SynthesizedProgram
+
+CacheKey = Tuple[str, int, str]          # (network, bucket, program fp)
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    stage_d_compiles: int = 0
+    stage_d_seconds: float = 0.0
+    evictions: int = 0
+
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / self.requests if self.requests else 0.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"hits": self.hits, "misses": self.misses,
+                "stage_d_compiles": self.stage_d_compiles,
+                "stage_d_seconds": round(self.stage_d_seconds, 6),
+                "evictions": self.evictions,
+                "hit_rate": round(self.hit_rate, 4)}
+
+
+class ProgramCache:
+    """LRU cache of compiled :class:`BatchProgram` executables.
+
+    ``max_entries`` bounds level 2 (compiled executables hold device
+    buffers); level 1 holds one ``SynthesizedProgram`` per admitted
+    ``(network, fingerprint)`` and is not evicted — weights live there.
+    """
+
+    def __init__(self, max_entries: int = 64):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.stats = CacheStats()
+        # One cache may back several servers' dispatch threads (shared
+        # compiled buckets across replicas) — guard all mutation.  Compiles
+        # run under the lock: slower first hit, but a bucket is never
+        # compiled twice.
+        self._lock = threading.Lock()
+        self._programs: Dict[Tuple[str, str], SynthesizedProgram] = {}
+        self._compiled: "OrderedDict[CacheKey, BatchProgram]" = OrderedDict()
+
+    # -- level 1: plan-time artifacts ---------------------------------------
+    def admit(self, program: SynthesizedProgram) -> str:
+        """Register a synthesized program; returns its fingerprint."""
+        fp = program.fingerprint()
+        with self._lock:
+            self._programs[(program.net.name, fp)] = program
+        return fp
+
+    def program(self, net_name: str, fingerprint: str) -> SynthesizedProgram:
+        with self._lock:
+            return self._programs[(net_name, fingerprint)]
+
+    @property
+    def programs(self) -> int:
+        with self._lock:
+            return len(self._programs)
+
+    # -- level 2: Stage-D executables ---------------------------------------
+    def get(self, program: SynthesizedProgram, batch: int) -> BatchProgram:
+        """The compiled executable for ``batch``, compiling on first use.
+
+        ``program`` must have been :meth:`admit`-ted (enforced so the
+        serving layer cannot leak unkeyed programs into the cache).
+        """
+        fp = program.fingerprint()
+        with self._lock:
+            if (program.net.name, fp) not in self._programs:
+                raise KeyError(
+                    f"program {program.net.name!r} (plan {fp}) not admitted; "
+                    f"call ProgramCache.admit(program) first")
+            key: CacheKey = (program.net.name, batch, fp)
+            hit = self._compiled.get(key)
+            if hit is not None:
+                self._compiled.move_to_end(key)
+                self.stats.hits += 1
+                return hit
+            self.stats.misses += 1
+            compiled = program.for_batch(batch)
+            self.stats.stage_d_compiles += 1
+            self.stats.stage_d_seconds += compiled.compile_seconds
+            self._compiled[key] = compiled
+            while len(self._compiled) > self.max_entries:
+                self._compiled.popitem(last=False)
+                self.stats.evictions += 1
+            return compiled
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._compiled)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        with self._lock:
+            return key in self._compiled

@@ -1,0 +1,195 @@
+"""SynthesisServer: batched serving of synthesized CNN programs.
+
+The end of the Cappuccino pipeline meets traffic here (DESIGN.md §6):
+single-image requests are coalesced by a :class:`~repro.serving.batcher.
+DynamicBatcher` into power-of-two buckets, each bucket is padded and
+dispatched through a :class:`~repro.serving.program_cache.ProgramCache`-
+held :class:`~repro.core.synthesizer.BatchProgram` (Stage D compiled once
+per bucket), and per-request rows are scattered back to their futures.
+
+Batching is semantically transparent: a request's output is bitwise
+identical to running its image through the program alone — padding rows
+are zeros and are sliced off, and row i of an XLA batch does not read row
+j.  The round-trip test in tests/test_serving_cnn.py pins this.
+
+Two dispatch modes share all logic:
+
+  ``start()``/``stop()``   a background thread waits on the batcher's
+                           flush triggers — the serving configuration;
+  ``pump()``               synchronously dispatch at most one bucket —
+                           deterministic, for tests and simulations.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.synthesizer import SynthesizedProgram
+from .batcher import Bucket, DynamicBatcher, FlushPolicy, ServingFuture
+from .program_cache import ProgramCache
+
+
+@dataclass
+class ServerStats:
+    requests: int = 0
+    completed: int = 0
+    failed: int = 0
+    batches: int = 0
+    padded_slots: int = 0
+    bucket_counts: Dict[int, int] = field(default_factory=dict)
+
+    @property
+    def dispatched_slots(self) -> int:
+        return sum(b * n for b, n in self.bucket_counts.items())
+
+    @property
+    def padding_fraction(self) -> float:
+        slots = self.dispatched_slots
+        return self.padded_slots / slots if slots else 0.0
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"requests": self.requests, "completed": self.completed,
+                "failed": self.failed, "batches": self.batches,
+                "padded_slots": self.padded_slots,
+                "padding_fraction": round(self.padding_fraction, 4),
+                "bucket_counts": {str(k): v for k, v
+                                  in sorted(self.bucket_counts.items())}}
+
+
+class SynthesisServer:
+    """Serve one synthesized program under a dynamic batching policy.
+
+    ``program`` carries Stages A–C (plan + prepared weights); the server
+    only ever triggers Stage D, through the shared ``cache`` — pass one
+    ``ProgramCache`` to several servers to share compiled buckets across
+    replicas of the same network/plan.
+    """
+
+    def __init__(self, program: SynthesizedProgram, *,
+                 cache: Optional[ProgramCache] = None,
+                 policy: Optional[FlushPolicy] = None):
+        self.program = program
+        self.cache = cache if cache is not None else ProgramCache()
+        self.policy = policy or FlushPolicy()
+        self.cache.admit(program)
+        self.batcher = DynamicBatcher(self.policy)
+        self.stats = ServerStats()
+        self._stats_lock = threading.Lock()   # submit() races the loop
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = threading.Event()
+
+    # -- request side -------------------------------------------------------
+    def submit(self, image) -> ServingFuture:
+        """Enqueue one (C, H, W) image; returns its completion future."""
+        expect = tuple(self.program.net.input_shape)
+        if tuple(np.shape(image)) != expect:
+            raise ValueError(f"expected a single image of shape {expect}, "
+                             f"got {tuple(np.shape(image))}")
+        with self._stats_lock:
+            self.stats.requests += 1
+        return self.batcher.submit(image)
+
+    def infer_one(self, image, timeout: Optional[float] = 30.0):
+        """Synchronous convenience wrapper: submit and wait.
+
+        With no background thread running, the request is flushed
+        immediately (a forced bucket of one) instead of waiting out the
+        batching deadline against nobody.
+        """
+        fut = self.submit(image)
+        if self._thread is None:
+            self.pump(force=True)
+        return fut.result(timeout)
+
+    # -- dispatch side ------------------------------------------------------
+    def _dispatch(self, bucket: Bucket) -> None:
+        try:
+            compiled = self.cache.get(self.program, bucket.batch)
+            x = jnp.stack([jnp.asarray(r.image, self.program.input_dtype)
+                           for r in bucket.requests])
+            if bucket.padding:
+                pad = jnp.zeros((bucket.padding, *x.shape[1:]), x.dtype)
+                x = jnp.concatenate([x, pad])
+            out = np.asarray(jax.block_until_ready(compiled(x)))
+            with self._stats_lock:
+                self.stats.batches += 1
+                self.stats.padded_slots += bucket.padding
+                self.stats.bucket_counts[bucket.batch] = \
+                    self.stats.bucket_counts.get(bucket.batch, 0) + 1
+            for i, req in enumerate(bucket.requests):
+                req.future.set_result(out[i])
+                with self._stats_lock:
+                    self.stats.completed += 1
+        except Exception as exc:  # surface the failure on every request
+            for req in bucket.requests:
+                req.future.set_exception(exc)
+                with self._stats_lock:
+                    self.stats.failed += 1
+
+    def pump(self, force: bool = False) -> int:
+        """Dispatch at most one bucket now; returns requests served."""
+        bucket = self.batcher.take(force=force)
+        if bucket is None:
+            return 0
+        self._dispatch(bucket)
+        return len(bucket.requests)
+
+    def drain(self) -> int:
+        """Dispatch until the queue is empty; returns requests served."""
+        served = 0
+        while True:
+            n = self.pump(force=True)
+            if n == 0:
+                return served
+            served += n
+
+    # -- background loop ----------------------------------------------------
+    def _loop(self) -> None:
+        poll = max(self.policy.max_delay_s, 1e-4)
+        while not self._stopping.is_set():
+            with self.batcher.not_empty:
+                if self.batcher.depth == 0 and not self._stopping.is_set():
+                    self.batcher.not_empty.wait(timeout=poll)
+            bucket = self.batcher.take()
+            if bucket is not None:
+                self._dispatch(bucket)
+                continue
+            # queued but no trigger fired yet: sleep until the oldest
+            # request's deadline (capped at poll so stop() stays responsive)
+            deadline = self.batcher.next_deadline()
+            if deadline is not None:
+                self._stopping.wait(
+                    max(0.0, min(deadline - time.perf_counter(), poll)))
+
+    def start(self) -> "SynthesisServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._stopping.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="synthesis-server", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the dispatch thread; by default drain queued requests."""
+        if self._thread is None:
+            return
+        self._stopping.set()
+        with self.batcher.not_empty:
+            self.batcher.not_empty.notify_all()
+        self._thread.join(timeout=30.0)
+        self._thread = None
+        if drain:
+            self.drain()
+
+    def __enter__(self) -> "SynthesisServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -67,7 +67,7 @@ def _install_hypothesis_stub():
                 raise TypeError(
                     f"hypothesis stub only supports integers/sampled_from/"
                     f"booleans strategies, got {s!r}; install the real "
-                    f"'hypothesis' package (pip install repro[test])")
+                    f"'hypothesis' package (pip install -e .[test])")
 
         def deco(fn):
             conf = getattr(fn, "_stub_settings", {})

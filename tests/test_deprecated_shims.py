@@ -1,0 +1,71 @@
+"""The deprecated global backend=/parallelism= flags must keep working:
+they warn, and they lower to exactly the uniform ExecutionPlan."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ComputeMode, ExecutionPlan, Parallelism, run_network,
+                        synthesize)
+from repro.cnn import init_network_params, squeezenet
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def small_net():
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 64, 64))
+    return net, params, x
+
+
+@pytest.mark.parametrize("backend,parallelism", [
+    ("xla", Parallelism.OLP),
+    ("xla", Parallelism.FLP),
+    ("pallas", Parallelism.OLP),
+])
+def test_run_network_shim_warns_and_matches_uniform_plan(small_net, backend,
+                                                         parallelism):
+    net, params, x = small_net
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = run_network(net, params, x, backend=backend,
+                             parallelism=parallelism)
+    plan = ExecutionPlan.uniform(net, backend=backend,
+                                 parallelism=parallelism)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # plan= is clean
+        planned = run_network(net, params, x, plan=plan)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(planned))
+
+
+def test_run_network_rejects_plan_plus_flags(small_net):
+    net, params, x = small_net
+    plan = ExecutionPlan.uniform(net)
+    with pytest.raises(ValueError, match="not both"):
+        run_network(net, params, x, plan=plan, backend="xla")
+
+
+def test_synthesize_shim_warns_and_matches_uniform_plan(small_net):
+    net, params, x = small_net
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = synthesize(net, params, forced_mode=ComputeMode.PRECISE,
+                            backend="xla", parallelism=Parallelism.OLP)
+    modes = {n: ComputeMode.PRECISE for n in net.inexactable_layers}
+    plan = ExecutionPlan.uniform(net, backend="xla",
+                                 parallelism=Parallelism.OLP, modes=modes)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        explicit = synthesize(net, params, forced_mode=ComputeMode.PRECISE,
+                              plan=plan)
+    assert legacy.plan.fingerprint() == explicit.plan.fingerprint()
+    np.testing.assert_array_equal(np.asarray(legacy.infer(x)),
+                                  np.asarray(explicit.infer(x)))
+
+
+def test_uniform_plan_unknown_backend_raises(small_net):
+    net, _, _ = small_net
+    with pytest.raises(ValueError, match="unknown backend"):
+        ExecutionPlan.uniform(net, backend="cuda")

@@ -128,3 +128,31 @@ def test_serving_engine_eos_early_stop():
     eos = int(probe.tokens[0, 1])
     res = engine.generate(prompts, max_new_tokens=32, eos_id=eos)
     assert res.steps <= 32
+
+
+def test_serving_engine_sampling_keys_unique_per_step():
+    """Regression: the prefill-derived first token must not sample with the
+    caller's raw key — every step gets its own fold, all distinct."""
+    cfg = get_smoke_config("qwen2-7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params, max_context=48,
+                           mode=ComputeMode.PRECISE)
+    seen = []
+    orig = engine._sample
+
+    def spy(logits, temperature, key):
+        assert key is not None
+        seen.append(tuple(np.asarray(jax.random.key_data(key)).tolist()))
+        return orig(logits, temperature, key)
+
+    engine._sample = spy
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0,
+                                 cfg.vocab_size)
+    base = jax.random.PRNGKey(5)
+    res = engine.generate(prompts, max_new_tokens=6, temperature=0.7,
+                          key=base)
+    assert res.tokens.shape == (2, 6)
+    assert len(seen) == 6
+    assert len(set(seen)) == len(seen), "a sampling key was reused"
+    raw = tuple(np.asarray(jax.random.key_data(base)).tolist())
+    assert raw not in set(seen), "raw user key leaked into sampling"
