@@ -33,10 +33,25 @@ def run(n_val: int = 64):
             csv_row("mode_selection.final_acc", 0.0,
                     f"acc={rep.final_metric:.4f}"),
             csv_row("mode_selection.evaluations", float(rep.evaluations))]
-    n_imprecise = sum(1 for m in rep.modes.values()
+    n_imprecise = sum(1 for m in prog.modes.values()
                       if m is ComputeMode.IMPRECISE)
     rows.append(csv_row("mode_selection.imprecise_layers", float(n_imprecise),
-                        f"of={len(rep.modes)}"))
+                        f"of={len(prog.modes)}"))
+    # The numbers that actually ship: the fixed-point loop's convergence and
+    # the final gate's measurement of the *emitted* program (not the probe
+    # path) — these are the paper-table accuracies to quote.
+    srep = prog.synthesis_report
+    val = srep.final_validation
+    rows += [csv_row("mode_selection.fixed_point_iterations",
+                     float(len(srep.iterations)),
+                     f"converged={srep.converged}"),
+             csv_row("mode_selection.validated_acc", 0.0,
+                     f"acc={val.accuracy:.4f}"),
+             csv_row("mode_selection.validated_degradation", 0.0,
+                     f"deg={val.degradation:.4f} budget=0.0"),
+             csv_row("mode_selection.gate_fallbacks",
+                     float(len(srep.fallbacks)),
+                     f"validated={srep.validated}")]
     # Stage A plan artifact: how the planner assigned implementations
     impls = [p.impl for _, p in prog.plan if p.impl != IMPL_DEFAULT]
     for impl in sorted(set(impls)):

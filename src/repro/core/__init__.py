@@ -22,13 +22,15 @@ from .network import (Layer, NetworkDescription, collect_activations,
 from .parallelism import (Parallelism, conv2d, conv2d_planned, conv_flp,
                           conv_klp, conv_olp)
 from .plan import (DEFAULT_LAYER_PLAN, IMPL_DEFAULT, IMPL_PALLAS,
-                   IMPL_SEQUENTIAL, IMPL_XLA, ExecutionPlan, LayerPlan)
+                   IMPL_SEQUENTIAL, IMPL_XLA, ExecutionPlan, IterationRecord,
+                   LayerPlan, SynthesisReport, ValidationRecord)
 from .planner import (PlannerConfig, autotune_plan, plan_network,
                       trace_shapes)
 from .precision import (MODES_FASTEST_FIRST, ComputeMode, QuantizedTensor,
                         mode_dot, mode_tolerance, prepare_operand,
                         prepare_weight, quantize_int8, resolve_weight)
-from .synthesizer import BatchProgram, SynthesizedProgram, synthesize
+from .synthesizer import (MAX_SYNTHESIS_ITERATIONS, BatchProgram,
+                          SynthesizedProgram, synthesize)
 
 __all__ = [
     "LANES", "from_map_major", "mapmajor_scatter_order", "num_groups",
@@ -40,9 +42,11 @@ __all__ = [
     "Parallelism", "conv2d", "conv2d_planned", "conv_flp", "conv_klp",
     "conv_olp",
     "DEFAULT_LAYER_PLAN", "IMPL_DEFAULT", "IMPL_PALLAS", "IMPL_SEQUENTIAL",
-    "IMPL_XLA", "ExecutionPlan", "LayerPlan",
+    "IMPL_XLA", "ExecutionPlan", "IterationRecord", "LayerPlan",
+    "SynthesisReport", "ValidationRecord",
     "PlannerConfig", "autotune_plan", "plan_network", "trace_shapes",
     "MODES_FASTEST_FIRST", "ComputeMode", "QuantizedTensor", "mode_dot",
     "mode_tolerance", "prepare_operand", "prepare_weight", "quantize_int8",
-    "resolve_weight", "BatchProgram", "SynthesizedProgram", "synthesize",
+    "resolve_weight", "BatchProgram", "MAX_SYNTHESIS_ITERATIONS",
+    "SynthesizedProgram", "synthesize",
 ]

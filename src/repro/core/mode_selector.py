@@ -68,8 +68,15 @@ class ModeSelectionReport:
 
 def select_modes(layer_names: Sequence[str], evaluate: EvalFn, *,
                  max_degradation: float = 0.0,
-                 allow_int8: bool = False) -> ModeSelectionReport:
-    """Greedy per-layer mode assignment under an accuracy-drop constraint."""
+                 allow_int8: bool = False,
+                 reference: Optional[float] = None) -> ModeSelectionReport:
+    """Greedy per-layer mode assignment under an accuracy-drop constraint.
+
+    ``reference`` supplies a pre-measured all-PRECISE metric; the synthesis
+    fixed-point loop passes the first iteration's reference into later
+    re-probes so the (mode-independent) baseline is not re-measured every
+    round.
+    """
     candidate_modes = [m for m in MODES_FASTEST_FIRST
                        if allow_int8 or m is not ComputeMode.IMPRECISE_INT8]
     fastest = candidate_modes[0]
@@ -82,8 +89,12 @@ def select_modes(layer_names: Sequence[str], evaluate: EvalFn, *,
         return float(evaluate(modes))
 
     precise = {n: ComputeMode.PRECISE for n in layer_names}
-    ref = run(precise)
-    trace.append(f"reference (all precise): {ref:.4f}")
+    if reference is None:
+        ref = run(precise)
+        trace.append(f"reference (all precise): {ref:.4f}")
+    else:
+        ref = float(reference)
+        trace.append(f"reference (warm start): {ref:.4f}")
 
     # Step 2: all-fastest shortcut.
     modes = {n: fastest for n in layer_names}
@@ -127,7 +138,8 @@ PlanEvalFn = Callable[["ExecutionPlan"], float]
 def refine_plan(plan: "ExecutionPlan", layer_names: Sequence[str],
                 evaluate_plan: PlanEvalFn, *,
                 max_degradation: float = 0.0,
-                allow_int8: bool = False
+                allow_int8: bool = False,
+                reference: Optional[float] = None
                 ) -> Tuple[ModeSelectionReport, "ExecutionPlan"]:
     """Joint mode+impl refinement of an execution plan (§IV-C on plans).
 
@@ -142,25 +154,16 @@ def refine_plan(plan: "ExecutionPlan", layer_names: Sequence[str],
     4. Re-measure once if step 3 changed anything, so the report's final
        metric describes the program actually emitted.
     """
-    from .plan import IMPL_PALLAS, IMPL_XLA
+    from .plan import enforce_precise_xla
 
     def evaluate(modes: Dict[str, ComputeMode]) -> float:
         return evaluate_plan(plan.with_modes(modes))
 
     report = select_modes(layer_names, evaluate,
                           max_degradation=max_degradation,
-                          allow_int8=allow_int8)
-    refined = plan.with_modes(report.modes)
-
-    switched = []
-    for name in layer_names:
-        lp = refined.for_layer(name)
-        if lp.mode is ComputeMode.PRECISE and lp.impl == IMPL_PALLAS:
-            refined = refined.with_layer(name, dataclasses.replace(
-                lp, impl=IMPL_XLA,
-                reason=(lp.reason + "; " if lp.reason else "")
-                + "joint: PRECISE -> xla (f32 HIGHEST path)"))
-            switched.append(name)
+                          allow_int8=allow_int8, reference=reference)
+    refined, switched = enforce_precise_xla(plan.with_modes(report.modes),
+                                            layer_names)
 
     if switched:
         final = float(evaluate_plan(refined))

@@ -23,7 +23,8 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field, replace
-from typing import TYPE_CHECKING, Dict, Iterator, Mapping, Optional, Tuple
+from typing import (TYPE_CHECKING, Dict, Iterable, Iterator, List, Mapping,
+                    Optional, Tuple)
 
 from .layout import LANES
 from .parallelism import Parallelism
@@ -168,3 +169,109 @@ class ExecutionPlan:
             layers[layer.name] = LayerPlan(impl=impl, parallelism=parallelism,
                                            mode=mode, u=u, reason=why)
         return cls(net.name, layers, origin="uniform")
+
+
+def enforce_precise_xla(plan: ExecutionPlan,
+                        layer_names: Optional[Iterable[str]] = None
+                        ) -> Tuple[ExecutionPlan, List[str]]:
+    """Apply the joint invariant: a PRECISE layer may not keep the
+    inexact-only Pallas kernel — it takes XLA's f32 HIGHEST path (the TPU
+    analogue of RenderScript reserving vectorization for inexact modes).
+
+    The single definition shared by Stage C (`mode_selector.refine_plan`)
+    and the synthesizer's overlay/fallback paths; `plan_network` enforces
+    the same rule at plan time.  Returns the adjusted plan and the names
+    that switched.
+    """
+    names = list(layer_names) if layer_names is not None \
+        else [n for n, _ in plan]
+    switched: List[str] = []
+    out = plan
+    for name in names:
+        lp = out.for_layer(name)
+        if lp.mode is ComputeMode.PRECISE and lp.impl == IMPL_PALLAS:
+            out = out.with_layer(name, replace(
+                lp, impl=IMPL_XLA,
+                reason=(lp.reason + "; " if lp.reason else "")
+                + "joint: PRECISE -> xla (f32 HIGHEST path)"))
+            switched.append(name)
+    return out, switched
+
+
+# ---------------------------------------------------------------------------
+# Synthesis report: the fixed-point loop's audit trail.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class IterationRecord:
+    """One fixed-point iteration: the plan that came out of re-planning under
+    the modes Stage C selected, and the metric those probes measured."""
+    index: int
+    plan_fingerprint: str
+    modes: Dict[str, ComputeMode]
+    probe_metric: float
+    evaluations: int
+
+
+@dataclass(frozen=True)
+class ValidationRecord:
+    """One final-gate measurement on the *emitted* dispatch path."""
+    plan_fingerprint: str
+    modes: Dict[str, ComputeMode]
+    accuracy: float
+    degradation: float
+    passed: bool
+
+
+@dataclass
+class SynthesisReport:
+    """Audit trail of the fixed-point synthesis loop + final validation gate.
+
+    ``iterations`` records each plan -> probe -> re-plan round until the
+    ``(plan.fingerprint(), modes)`` pair converged (``converged``), hit the
+    iteration cap, or entered a cycle broken by the deterministic tie-break
+    (``tie_broken``).  ``validations`` records every candidate the final
+    gate measured on the emitted dispatch path — the same
+    ``SynthesizedProgram.infer`` path serving uses — and ``fallbacks`` the
+    mode demotions taken when a candidate overshot ``max_degradation``.
+    ``validated`` is True iff the *returned* program's measured degradation
+    is within budget (trivially True for the all-PRECISE fallback floor).
+    """
+    iterations: List[IterationRecord] = field(default_factory=list)
+    converged: bool = False
+    tie_broken: bool = False
+    max_iterations: int = 0
+    reference_accuracy: Optional[float] = None   # emitted-path, all-PRECISE
+    validations: List[ValidationRecord] = field(default_factory=list)
+    fallbacks: List[str] = field(default_factory=list)
+    validated: bool = False
+    gate_skipped_reason: Optional[str] = None    # e.g. forced_mode, no val set
+
+    @property
+    def final_validation(self) -> Optional[ValidationRecord]:
+        return self.validations[-1] if self.validations else None
+
+    def summary(self) -> str:
+        lines = [f"fixed-point loop : {len(self.iterations)} iteration(s), "
+                 + ("converged" if self.converged
+                    else "tie-broken" if self.tie_broken
+                    else f"cap ({self.max_iterations}) hit")]
+        for it in self.iterations:
+            lines.append(f"  iter {it.index}: plan {it.plan_fingerprint} "
+                         f"probe={it.probe_metric:.4f} "
+                         f"({it.evaluations} evals)")
+        if self.gate_skipped_reason is not None:
+            lines.append(f"validation gate  : skipped "
+                         f"({self.gate_skipped_reason})")
+        else:
+            lines.append(f"validation gate  : "
+                         f"{'passed' if self.validated else 'FAILED'} "
+                         f"(reference {self.reference_accuracy:.4f})")
+            for v in self.validations:
+                lines.append(f"  plan {v.plan_fingerprint}: "
+                             f"acc={v.accuracy:.4f} "
+                             f"degradation={v.degradation:.4f} "
+                             f"{'ok' if v.passed else 'over budget'}")
+            for fb in self.fallbacks:
+                lines.append(f"  fallback: {fb}")
+        return "\n".join(lines)

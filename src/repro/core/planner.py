@@ -283,10 +283,18 @@ def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
 
     Runs the planned network once, capturing every parametric layer's input,
     then times each candidate implementation in place and keeps the fastest.
-    The Pallas candidate is dropped for VMEM-infeasible convs (rule 1,
-    re-checked here on actual shapes so non-planner plans are covered too):
-    the kernel's own envelope fallback would silently remeasure XLA and
-    could record a Pallas plan for a layer that always executes XLA.
+    Timings are taken under each layer's *current plan mode* — the
+    synthesizer calls this inside its fixed-point loop, so by the last
+    round the measurements describe the final Stage-C modes, not the static
+    plan's PRECISE defaults.  Two candidates are dropped up front:
+
+    * the Pallas candidate for VMEM-infeasible convs (rule 1, re-checked
+      here on actual shapes so non-planner plans are covered too): the
+      kernel's own envelope fallback would silently remeasure XLA and
+      could record a Pallas plan for a layer that always executes XLA;
+    * the Pallas candidate for PRECISE-mode layers (the joint invariant:
+      the vector-MAC kernel is inexact-only; timing it under PRECISE would
+      let a measurement contradict ``mode_selector.refine_plan``).
     """
     from ..kernels.conv_mapmajor.ops import fits_vmem
     from .layer_ops import apply_layer
@@ -300,6 +308,8 @@ def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
         base = plan.for_layer(l.name)
         x_in = acts[l.inputs[0]]
         layer_candidates = list(candidates)
+        if base.mode is ComputeMode.PRECISE and IMPL_PALLAS in layer_candidates:
+            layer_candidates.remove(IMPL_PALLAS)
         if l.kind == "conv" and IMPL_PALLAS in layer_candidates:
             _, _, h_in, w_in = x_in.shape
             if not fits_vmem(h_in, w_in, l.kernel, l.stride, l.padding,

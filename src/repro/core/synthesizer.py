@@ -20,6 +20,19 @@ Stages:
      callable with the per-layer plan baked in, plus a human-readable
      synthesis report (the analogue of the generated RenderScript source).
 
+Stages A and C are not run once each: because the planner's cost rules are
+mode-dependent and Stage C's probes are plan-dependent, ``synthesize`` runs
+them as a **fixed-point loop** — plan, probe modes under that plan, re-plan
+under the selected modes, re-probe — until the ``(plan.fingerprint(),
+modes)`` pair converges (iteration cap + deterministic tie-break; DESIGN.md
+§7).  The measured autotune pass runs *inside* the loop, so impl timings
+are (re)taken under the modes that actually ship.  After convergence a
+**final validation gate** executes the emitted program — the same dispatch
+path ``SynthesizedProgram.infer`` / ``for_batch`` serve — on the
+calibration set and asserts measured degradation ≤ ``max_degradation``,
+demoting modes toward all-PRECISE when the gate fails.  The audit trail is
+a :class:`~repro.core.plan.SynthesisReport` on the returned program.
+
 Stages A–C are *plan-time*: they depend on the network, weights, and
 validation set but not on the serving batch shape.  Stage D is *shape
 specialization*: XLA compiles for one concrete input shape.  The split is
@@ -30,11 +43,12 @@ serving/program_cache.py and DESIGN.md §6).
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import time
 import warnings
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,9 +58,17 @@ from .layout import LANES, weights_to_map_major
 from .mode_selector import ModeSelectionReport, refine_plan
 from .network import NetworkDescription, run_network
 from .parallelism import Parallelism
-from .plan import ExecutionPlan
+from .plan import (ExecutionPlan, IterationRecord, SynthesisReport,
+                   ValidationRecord, enforce_precise_xla)
 from .planner import PlannerConfig, autotune_plan, plan_network
-from .precision import ComputeMode, prepare_weight
+from .precision import MODES_FASTEST_FIRST, ComputeMode, prepare_weight
+
+#: Fixed-point iteration cap: plan -> probe -> re-plan rounds before the
+#: deterministic tie-break picks among the visited states.
+MAX_SYNTHESIS_ITERATIONS = 4
+
+#: Float slack for the validation gate's degradation comparison.
+_GATE_EPS = 1e-9
 
 
 @dataclass
@@ -89,6 +111,7 @@ class SynthesizedProgram:
     parallelism: Parallelism
     mode_report: Optional[ModeSelectionReport]
     synthesis_seconds: float
+    synthesis_report: Optional[SynthesisReport] = None
     prepared: Dict[str, Dict[str, jnp.ndarray]] = field(repr=False,
                                                         default_factory=dict)
     vector_width: int = LANES
@@ -167,6 +190,10 @@ class SynthesizedProgram:
         if self.mode_report is not None:
             lines.append("mode selection:")
             lines.append("  " + self.mode_report.summary().replace("\n", "\n  "))
+        if self.synthesis_report is not None:
+            lines.append("fixed-point synthesis:")
+            lines.append("  " + self.synthesis_report.summary()
+                         .replace("\n", "\n  "))
         return "\n".join(lines)
 
 
@@ -193,6 +220,70 @@ def _accuracy_eval(net, params, images, labels):
     return evaluate_plan
 
 
+# ---------------------------------------------------------------------------
+# Fixed-point loop + validation-gate helpers.
+# ---------------------------------------------------------------------------
+
+def _modes_key(modes: Dict[str, ComputeMode]) -> Tuple[Tuple[str, str], ...]:
+    """Hashable, order-independent identity of a mode assignment."""
+    return tuple(sorted((n, m.value) for n, m in modes.items()))
+
+
+def _replan(net: NetworkDescription, base: ExecutionPlan,
+            modes: Dict[str, ComputeMode],
+            planner_config: Optional[PlannerConfig]) -> ExecutionPlan:
+    """Fold a mode assignment into a plan, re-deriving impl routing.
+
+    A static planner plan is *re-planned* under the modes — the cost rules
+    are mode-dependent (VMEM envelope dtype, PRECISE's f32-path invariant),
+    so a plan drawn at the PRECISE default would mis-route bf16-feasible
+    layers.  Measured (autotune) and user/uniform plans keep their impls;
+    only modes overlay, with the PRECISE->XLA invariant re-applied
+    (:func:`~repro.core.plan.enforce_precise_xla`).
+    """
+    if base.origin == "planner":
+        return plan_network(net, modes=modes, config=planner_config)
+    overlaid, _ = enforce_precise_xla(base.with_modes(modes))
+    return overlaid
+
+
+def _prepare_params(net: NetworkDescription, params,
+                    modes: Dict[str, ComputeMode]):
+    """Stage B: compile-time parameter preparation per chosen mode
+    (cast / int8-quantize; map-major reorder happens inside the Pallas
+    kernels' operand spec — weights_to_map_major is exposed for them)."""
+    prepared = {}
+    for l in net.param_layers:
+        p = dict(params[l.name])
+        p["w"] = prepare_weight(p["w"], modes[l.name], channel_axis=0)
+        if "b" in p:
+            p["b"] = p["b"].astype(jnp.float32)
+        prepared[l.name] = p
+    return prepared
+
+
+def _program_accuracy(program: "SynthesizedProgram", images, labels) -> float:
+    """Top-1 accuracy of the *emitted* program — ``program.infer``, the
+    exact dispatch path serving's ``for_batch`` specializes (same plan,
+    same prepared weights, Pallas routing included)."""
+    pred = jnp.argmax(program.infer(images), axis=-1)
+    return float(jnp.mean((pred == labels).astype(jnp.float32)))
+
+
+def _demote_modes(modes: Dict[str, ComputeMode]) -> Dict[str, ComputeMode]:
+    """One fallback step: every layer moves one mode toward PRECISE."""
+    order = list(MODES_FASTEST_FIRST)            # fastest ... PRECISE
+    return {n: order[min(order.index(m) + 1, len(order) - 1)]
+            for n, m in modes.items()}
+
+
+def _dominant_policy(net: NetworkDescription,
+                     plan: ExecutionPlan) -> Parallelism:
+    """Legacy metadata: the dominant thread policy across parametric layers."""
+    policies = {plan.for_layer(l.name).parallelism for l in net.param_layers}
+    return policies.pop() if len(policies) == 1 else Parallelism.OLP
+
+
 def synthesize(net: NetworkDescription,
                params: Dict[str, Dict[str, jnp.ndarray]],
                validation: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
@@ -203,6 +294,7 @@ def synthesize(net: NetworkDescription,
                planner_config: Optional[PlannerConfig] = None,
                autotune: bool = False,
                autotune_input: Optional[jnp.ndarray] = None,
+               max_iterations: int = MAX_SYNTHESIS_ITERATIONS,
                parallelism: Optional[Parallelism] = None,
                backend: Optional[str] = None,
                forced_mode: Optional[ComputeMode] = None) -> SynthesizedProgram:
@@ -213,13 +305,25 @@ def synthesize(net: NetworkDescription,
     deprecated global flags, lowered to a uniform plan (legacy call sites
     keep their exact historical dispatch).
 
-    ``forced_mode`` skips stage C and pins every tunable layer to one mode —
-    used to reproduce the paper's 'Parallel' (RELAXED/PRECISE) and
-    'Imprecise' table columns directly.  ``autotune=True`` refines the
-    static plan with per-layer measurements on ``autotune_input`` (or the
-    validation images).
+    With a validation set, Stages A and C run as a **fixed-point loop**
+    (plan -> probe -> re-plan, ``max_iterations`` cap, deterministic
+    tie-break on cycles), and a **final validation gate** measures the
+    emitted program — the exact ``infer``/``for_batch`` dispatch path —
+    against ``max_degradation``, demoting modes toward all-PRECISE until
+    the budget holds.  The returned program's measured degradation on the
+    calibration set therefore never exceeds ``max_degradation``; the audit
+    trail is ``program.synthesis_report``.
+
+    ``forced_mode`` skips stage C (and the gate — the caller is pinning
+    modes deliberately, e.g. to reproduce the paper's 'Parallel' and
+    'Imprecise' table columns).  ``autotune=True`` refines the plan with
+    per-layer measurements on ``autotune_input`` (or the validation
+    images); inside the loop, so timings are (re)taken under the final
+    Stage-C modes.
     """
     t0 = time.time()
+    if max_iterations < 1:
+        raise ValueError(f"max_iterations must be >= 1, got {max_iterations}")
 
     # Stage A: primary program synthesis -> ExecutionPlan artifact.
     if plan is None:
@@ -233,64 +337,169 @@ def synthesize(net: NetworkDescription,
                 parallelism=parallelism or Parallelism.OLP)
         else:
             plan = plan_network(net, config=planner_config)
+    tune_x = None
     if autotune:
         tune_x = autotune_input if autotune_input is not None else \
             (validation[0] if validation is not None else None)
         if tune_x is None:
             raise ValueError("autotune=True needs autotune_input= or a "
                              "validation set")
-        plan = autotune_plan(net, params, tune_x, plan)
 
-    # Stage C: inexact-computing analysis (or forced mode), evaluated under
-    # the planned implementations (joint mode+impl refinement).
-    mode_report = None
-    if forced_mode is not None:
-        modes = {n: forced_mode for n in net.inexactable_layers}
-    elif validation is not None:
-        images, labels = validation
-        evaluate_plan = _accuracy_eval(net, params, images, labels)
-        mode_report, plan = refine_plan(plan, net.inexactable_layers,
-                                        evaluate_plan,
-                                        max_degradation=max_degradation,
-                                        allow_int8=allow_int8)
-        modes = mode_report.modes
+    mode_report: Optional[ModeSelectionReport] = None
+    if forced_mode is not None or validation is None:
+        # Single-pass path: modes are pinned (forced_mode) or defaulted
+        # (RELAXED), so there is nothing to iterate and nothing the gate
+        # could measure them against.
+        modes = {n: forced_mode or ComputeMode.RELAXED
+                 for n in net.inexactable_layers}
+        plan = _replan(net, plan, modes, planner_config)
+        if autotune:
+            plan = autotune_plan(net, params, tune_x, plan)
+        synthesis_report = SynthesisReport(
+            converged=True, max_iterations=max_iterations,
+            gate_skipped_reason=("forced_mode pins Stage C"
+                                 if forced_mode is not None
+                                 else "no validation set"))
+        program = SynthesizedProgram(
+            net=net, plan=plan, modes=modes,
+            parallelism=_dominant_policy(net, plan),
+            mode_report=None, synthesis_seconds=time.time() - t0,
+            synthesis_report=synthesis_report,
+            prepared=_prepare_params(net, params, modes))
+        return program
+
+    # ---- Fixed-point loop: plan -> mode probe -> re-plan -> re-probe ------
+    images, labels = validation
+    evaluate_plan = _accuracy_eval(net, params, images, labels)
+    layer_names = net.inexactable_layers
+    synthesis_report = SynthesisReport(max_iterations=max_iterations)
+    seen: Dict[tuple, int] = {}                  # state key -> states index
+    states: List[Tuple[ExecutionPlan, Dict[str, ComputeMode],
+                       ModeSelectionReport]] = []
+    precise_modes = {n: ComputeMode.PRECISE for n in layer_names}
+    probe_reference: Optional[float] = None
+    probe_reference_fp: Optional[str] = None
+    current = plan
+
+    for i in range(1, max_iterations + 1):
+        if autotune:
+            current = autotune_plan(net, params, tune_x, current)
+        # The all-PRECISE reference is mode-independent but *plan*-
+        # dependent (probes run under this round's impl routing), so the
+        # warm start only holds while the PRECISE-overlay plan — what the
+        # reference probe would actually execute — is unchanged.
+        ref_fp = current.with_modes(precise_modes).fingerprint()
+        if ref_fp != probe_reference_fp:
+            probe_reference, probe_reference_fp = None, ref_fp
+        report, probed = refine_plan(current, layer_names, evaluate_plan,
+                                     max_degradation=max_degradation,
+                                     allow_int8=allow_int8,
+                                     reference=probe_reference)
+        probe_reference = report.reference_metric
+        modes = report.modes
+        next_plan = _replan(net, probed, modes, planner_config)
+        key = (next_plan.fingerprint(), _modes_key(modes))
+        synthesis_report.iterations.append(IterationRecord(
+            index=i, plan_fingerprint=next_plan.fingerprint(),
+            modes=dict(modes), probe_metric=report.final_metric,
+            evaluations=report.evaluations))
+        states.append((next_plan, modes, report))
+
+        # Fixed point.  Without autotune, two equivalent signals:
+        # re-planning changed nothing vs what Stage C just measured
+        # (ship-what-you-probed), or the (fingerprint, modes) pair matches
+        # the previous round.  With autotune the first signal is vacuous —
+        # _replan takes the overlay path on an autotuned plan, so next_plan
+        # always equals probed — and a genuine fixed point means the pair
+        # survived a full re-autotune + re-probe round: only the
+        # previous-round match counts, which also guarantees the shipped
+        # timings were taken under the shipped modes.
+        prev_key = (states[-2][0].fingerprint(), _modes_key(states[-2][1])) \
+            if len(states) >= 2 else None
+        at_fixed_point = key == prev_key if autotune else (
+            next_plan.fingerprint() == probed.fingerprint()
+            or key == prev_key)
+        if at_fixed_point:
+            synthesis_report.converged = True
+            current, mode_report = next_plan, report
+            break
+        if key in seen:
+            # Cycle: break it deterministically — among the states forming
+            # the cycle, keep the one with the smallest (fingerprint,
+            # modes) sort key.  Any member is a state the loop keeps
+            # revisiting; the min-key rule just makes the choice stable
+            # across runs and platforms.
+            cycle = states[seen[key]:-1]
+            chosen = min(cycle,
+                         key=lambda s: (s[0].fingerprint(),
+                                        _modes_key(s[1])))
+            synthesis_report.tie_broken = True
+            current, modes, mode_report = chosen
+            break
+        seen[key] = len(states) - 1
+        current = next_plan
     else:
-        modes = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
+        # Cap hit without convergence: same deterministic rule over
+        # everything visited.
+        chosen = min(states, key=lambda s: (s[0].fingerprint(),
+                                            _modes_key(s[1])))
+        synthesis_report.tie_broken = True
+        current, modes, mode_report = chosen
 
-    # Fold the chosen modes back into the plan.  A static planner plan is
-    # *re-planned* under the final modes — the cost rules are mode-dependent
-    # (VMEM envelope dtype, PRECISE's f32-path invariant), so a plan drawn
-    # at the PRECISE default would mis-route bf16-feasible layers.  Measured
-    # (autotune) and user/uniform plans keep their impls; only modes overlay.
-    if plan.origin == "planner":
-        plan = plan_network(net, modes=modes, config=planner_config)
-    else:
-        plan = plan.with_modes(modes)
+    # ---- Final validation gate on the emitted dispatch path ---------------
+    # Reference: the all-PRECISE program, *emitted* (prepared weights,
+    # jitted plan dispatch) — the same path the candidate runs, so the
+    # all-PRECISE fallback floor is degradation-free by construction.
+    ref_plan = _replan(net, current, precise_modes, planner_config)
+    ref_program = SynthesizedProgram(
+        net=net, plan=ref_plan, modes=precise_modes,
+        parallelism=_dominant_policy(net, ref_plan),
+        mode_report=None, synthesis_seconds=0.0,
+        prepared=_prepare_params(net, params, precise_modes))
+    ref_acc = _program_accuracy(ref_program, images, labels)
+    synthesis_report.reference_accuracy = ref_acc
+    acc_memo = {ref_program.fingerprint(): ref_acc}
 
-    # Stage B: compile-time parameter preparation per chosen mode
-    # (cast / int8-quantize; map-major reorder happens inside the Pallas
-    # kernels' operand spec — weights_to_map_major is exposed for them).
-    prepared = {}
-    for l in net.param_layers:
-        p = dict(params[l.name])
-        mode = modes[l.name]
-        p["w"] = prepare_weight(p["w"], mode, channel_axis=0)
-        if "b" in p:
-            p["b"] = p["b"].astype(jnp.float32)
-        prepared[l.name] = p
+    cand_plan, cand_modes = current, modes
+    while True:
+        program = SynthesizedProgram(
+            net=net, plan=cand_plan, modes=cand_modes,
+            parallelism=_dominant_policy(net, cand_plan),
+            mode_report=mode_report, synthesis_seconds=0.0,
+            synthesis_report=synthesis_report,
+            prepared=_prepare_params(net, params, cand_modes))
+        fp = program.fingerprint()
+        acc = acc_memo.get(fp)
+        if acc is None:
+            acc = _program_accuracy(program, images, labels)
+            acc_memo[fp] = acc
+        degradation = ref_acc - acc
+        passed = degradation <= max_degradation + _GATE_EPS
+        synthesis_report.validations.append(ValidationRecord(
+            plan_fingerprint=cand_plan.fingerprint(), modes=dict(cand_modes),
+            accuracy=acc, degradation=degradation, passed=passed))
+        if passed:
+            break
+        if all(m is ComputeMode.PRECISE for m in cand_modes.values()):
+            break         # the floor; degradation is 0 here by construction
+        demoted = _demote_modes(cand_modes)
+        changed = sorted(n for n in cand_modes
+                         if demoted[n] is not cand_modes[n])
+        synthesis_report.fallbacks.append(
+            f"measured degradation {degradation:.4f} > budget "
+            f"{max_degradation:.4f}: demoted {', '.join(changed)}")
+        cand_modes = demoted
+        cand_plan = _replan(net, cand_plan, cand_modes, planner_config)
 
-    # Stage D is deferred: the returned program carries the plan + prepared
-    # weights, and compiles on demand — shape-polymorphically via .infer, or
-    # per fixed batch via .for_batch (what the serving ProgramCache calls).
-    final_plan = plan
-
-    # Legacy metadata: the dominant thread policy across parametric layers.
-    policies = {final_plan.for_layer(l.name).parallelism
-                for l in net.param_layers}
-    thread_policy = policies.pop() if len(policies) == 1 else Parallelism.OLP
-
-    return SynthesizedProgram(net=net, plan=final_plan,
-                              modes=modes, parallelism=thread_policy,
-                              mode_report=mode_report,
-                              synthesis_seconds=time.time() - t0,
-                              prepared=prepared)
+    synthesis_report.validated = passed
+    if synthesis_report.fallbacks and mode_report is not None:
+        # Stage C's selection was rejected by the gate: the shipped report
+        # must describe the shipped program, not the rejected candidate.
+        program.mode_report = dataclasses.replace(
+            mode_report, modes=dict(cand_modes), final_metric=acc,
+            trace=mode_report.trace + [
+                "validation gate: Stage-C selection superseded by fallback; "
+                f"shipped modes re-measured at {acc:.4f} on the emitted "
+                "path"])
+    program.synthesis_seconds = time.time() - t0
+    return program

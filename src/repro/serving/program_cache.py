@@ -18,7 +18,11 @@ prepared weights: re-synthesizing a network under the same planner decision
 and weights reuses every compiled bucket, while any plan change (a
 re-routed layer, a different compute mode) or weight change (a retrain)
 gets fresh executables — compiled programs close over their weights, so
-weights must be part of the key.
+weights must be part of the key.  The plan a ``SynthesizedProgram``
+carries is the *converged, gate-validated* plan (the synthesizer's
+fixed-point loop and validation gate run before the program exists — see
+core/synthesizer.py), so a gate fallback that demotes modes changes the
+fingerprint and can never alias a pre-fallback executable.
 
 ``CacheStats`` records hits/misses/compiles — the round-trip acceptance
 test and the serving benchmark both read them.
@@ -98,11 +102,15 @@ class ProgramCache:
             return len(self._programs)
 
     # -- level 2: Stage-D executables ---------------------------------------
-    def get(self, program: SynthesizedProgram, batch: int) -> BatchProgram:
+    def get_or_build(self, program: SynthesizedProgram,
+                     batch: int) -> BatchProgram:
         """The compiled executable for ``batch``, compiling on first use.
 
         ``program`` must have been :meth:`admit`-ted (enforced so the
         serving layer cannot leak unkeyed programs into the cache).
+        Thread-safe: concurrent callers for the same ``(network, bucket)``
+        serialize on the cache lock and exactly one of them compiles — the
+        rest read the fresh entry as hits.
         """
         fp = program.fingerprint()
         with self._lock:
@@ -125,6 +133,9 @@ class ProgramCache:
                 self._compiled.popitem(last=False)
                 self.stats.evictions += 1
             return compiled
+
+    #: Historical name for :meth:`get_or_build` (kept for call sites).
+    get = get_or_build
 
     def __len__(self) -> int:
         with self._lock:

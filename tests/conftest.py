@@ -9,8 +9,11 @@ Two jobs:
    The stub drives each ``@given`` test with a deterministic pseudo-random
    sample of ``max_examples`` draws per strategy.  It implements exactly the
    strategy surface this suite uses (``integers``, ``sampled_from``,
-   ``booleans``); anything else raises loudly so new tests either stay
-   within the subset or declare the real dependency.
+   ``booleans``, plus top-level ``assume``); anything else raises loudly so
+   new tests either stay within the subset or declare the real dependency.
+   ``assume(False)`` skips the offending draw and moves on to the next
+   example, like the real package (minus its too-many-rejections health
+   check).
 
 The stub is intentionally simpler than hypothesis: no shrinking, no
 database, no health checks.  Seeds derive from the test name, so failures
@@ -55,6 +58,14 @@ def _install_hypothesis_stub():
     def booleans():
         return _Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
 
+    class _StubAssumption(Exception):
+        """Raised by assume(False); the @given wrapper skips the draw."""
+
+    def assume(condition):
+        if not condition:
+            raise _StubAssumption()
+        return True
+
     def settings(**kwargs):
         def deco(fn):
             fn._stub_settings = kwargs
@@ -76,13 +87,22 @@ def _install_hypothesis_stub():
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
-                for _ in range(max_examples):
+                ran = 0
+                # assume() rejections don't count as examples; the draw
+                # budget bounds the loop when a test rejects almost all of
+                # its input space.
+                for _ in range(max_examples * 10):
+                    if ran >= max_examples:
+                        break
                     drawn_args = tuple(s.draw(rng) for s in arg_strategies)
                     drawn_kw = {k: s.draw(rng)
                                 for k, s in kw_strategies.items()}
                     drawn_kw.update(kwargs)
                     try:
                         fn(*args, *drawn_args, **drawn_kw)
+                        ran += 1
+                    except _StubAssumption:
+                        continue
                     except Exception as e:
                         e.args = (f"[hypothesis-stub falsifying example: "
                                   f"args={drawn_args} kwargs={drawn_kw}] "
@@ -109,6 +129,7 @@ def _install_hypothesis_stub():
     hyp_mod = types.ModuleType("hypothesis")
     hyp_mod.given = given
     hyp_mod.settings = settings
+    hyp_mod.assume = assume
     hyp_mod.strategies = st_mod
     hyp_mod.__stub__ = True
 

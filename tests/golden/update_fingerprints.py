@@ -1,0 +1,61 @@
+"""Regenerate tests/golden/plan_fingerprints.json.
+
+Run after an *intentional* change to plan dispatch content (impl routing,
+thread policy, mode folding, channel-group width, or the fingerprint
+algorithm itself):
+
+    PYTHONPATH=src python tests/golden/update_fingerprints.py
+
+The golden file pins `ExecutionPlan.fingerprint()` for the seed networks
+under explicit planner configs (``allow_pallas`` pinned both ways so the
+values are identical on CPU and TPU hosts).  The paired test,
+tests/test_plan_fingerprint_golden.py, fails loudly when dispatch content
+drifts silently — a drifted fingerprint invalidates every ProgramCache
+entry keyed on it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN_PATH = os.path.join(HERE, "plan_fingerprints.json")
+sys.path.insert(0, os.path.join(HERE, os.pardir, os.pardir, "src"))
+
+
+def compute_fingerprints() -> dict:
+    """name -> fingerprint for every pinned (network, config, modes) case."""
+    from repro.cnn import alexnet, googlenet, squeezenet
+    from repro.core import ComputeMode, PlannerConfig, plan_network
+
+    nets = {
+        "alexnet_s0.1_hw67": alexnet(scale=0.1, num_classes=10, input_hw=67),
+        "squeezenet_s0.08_hw64": squeezenet(scale=0.08, num_classes=10,
+                                            input_hw=64),
+        "googlenet_s0.1_hw64": googlenet(scale=0.1, num_classes=10,
+                                         input_hw=64),
+    }
+    out = {}
+    for name, net in nets.items():
+        for allow_pallas in (False, True):
+            cfg = PlannerConfig(allow_pallas=allow_pallas)
+            tag = "pallas" if allow_pallas else "xla_only"
+            out[f"{name}.{tag}.precise_default"] = \
+                plan_network(net, config=cfg).fingerprint()
+            relaxed = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
+            out[f"{name}.{tag}.all_relaxed"] = \
+                plan_network(net, modes=relaxed, config=cfg).fingerprint()
+    return out
+
+
+def main():
+    fingerprints = compute_fingerprints()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(fingerprints, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(fingerprints)} fingerprints to {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Property-based conformance suite for the plan/kernel stack.
+
+Strategies range over (H, W, Cin, Cout, K, stride, SAME/VALID, dtype) and
+assert that every conv implementation the planner can dispatch to —
+``conv_klp``, ``conv_flp`` (the Table-III baselines) and the map-major
+Pallas kernel — matches the XLA OLP reference within the compute mode's
+tolerance.  Runs under the real ``hypothesis`` package when installed and
+under the deterministic stub in conftest.py otherwise (same strategy
+surface, fixed per-test seeds).
+
+Marked ``property`` so CI matrix legs can include or exclude the suite
+explicitly (``-m property`` / ``-m "not property"``).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.parallelism import conv_flp, conv_klp, conv_olp
+from repro.core.precision import ComputeMode, mode_tolerance
+from repro.kernels.conv_mapmajor.ops import conv2d_mapmajor
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.property
+
+MODES = [ComputeMode.PRECISE, ComputeMode.RELAXED, ComputeMode.IMPRECISE]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(h, w, cin, cout, k, dtype, salt):
+    seed = (h * 73 + w * 71 + cin * 67 + cout * 61 + k * 59 + salt) % (2**31)
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (2, cin, h, w)).astype(dtype)
+    wgt = (jax.random.normal(kw, (cout, cin, k, k)) * 0.1).astype(dtype)
+    return x, wgt
+
+
+def _assert_close(got, want, mode):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    tol = mode_tolerance(mode)
+    np.testing.assert_allclose(got, want, rtol=tol,
+                               atol=tol * max(np.abs(want).max(), 1.0))
+
+
+CONV_GEOMETRY = dict(
+    h=st.integers(4, 12), w=st.integers(4, 12),
+    cin=st.integers(1, 6), cout=st.integers(1, 6),
+    k=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
+    padding=st.sampled_from(["SAME", "VALID"]),
+    mode=st.sampled_from(MODES), dtype=st.sampled_from(DTYPES),
+)
+
+
+@given(**CONV_GEOMETRY)
+@settings(max_examples=20, deadline=None)
+def test_conv_klp_matches_reference(h, w, cin, cout, k, stride, padding,
+                                    mode, dtype):
+    assume(padding == "SAME" or (k <= h and k <= w))
+    x, wgt = _data(h, w, cin, cout, k, dtype, salt=1)
+    got = conv_klp(x, wgt, stride=stride, padding=padding, mode=mode)
+    want = conv_olp(x, wgt, stride=stride, padding=padding, mode=mode)
+    assert got.shape == want.shape
+    assert got.dtype == mode.out_dtype
+    _assert_close(got, want, mode)
+
+
+@given(**CONV_GEOMETRY)
+@settings(max_examples=20, deadline=None)
+def test_conv_flp_matches_reference(h, w, cin, cout, k, stride, padding,
+                                    mode, dtype):
+    assume(padding == "SAME" or (k <= h and k <= w))
+    x, wgt = _data(h, w, cin, cout, k, dtype, salt=2)
+    got = conv_flp(x, wgt, stride=stride, padding=padding, mode=mode)
+    want = conv_olp(x, wgt, stride=stride, padding=padding, mode=mode)
+    assert got.shape == want.shape
+    assert got.dtype == mode.out_dtype
+    _assert_close(got, want, mode)
+
+
+@given(h=st.integers(4, 10), w=st.integers(4, 10),
+       cin=st.integers(1, 6), cout=st.integers(1, 6),
+       k=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
+       padding=st.sampled_from(["SAME", "VALID"]),
+       mode=st.sampled_from(MODES), dtype=st.sampled_from(DTYPES),
+       u=st.sampled_from([4, 8]))
+@settings(max_examples=12, deadline=None)
+def test_conv_mapmajor_matches_reference(h, w, cin, cout, k, stride, padding,
+                                         mode, dtype, u):
+    assume(k <= h and k <= w)      # kernel never larger than the plane
+    x, wgt = _data(h, w, cin, cout, k, dtype, salt=3)
+    got = conv2d_mapmajor(x, wgt, stride=stride, padding=padding, mode=mode,
+                          u=u)
+    want = conv_olp(x, wgt, stride=stride, padding=padding, mode=mode)
+    assert got.shape == want.shape
+    _assert_close(got, want, mode)

@@ -74,6 +74,7 @@ def test_conv_bias_and_output_is_mapmajor_consumable():
     _assert_close(y2, ref2, ComputeMode.PRECISE)
 
 
+@pytest.mark.property
 @given(cin=st.integers(1, 9), cout=st.integers(1, 9), hw=st.integers(4, 14),
        k=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]))
 @settings(max_examples=25, deadline=None)
@@ -109,6 +110,7 @@ def test_matmul_batched_leading_dims():
     _assert_close(got, want, ComputeMode.PRECISE)
 
 
+@pytest.mark.property
 @given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70))
 @settings(max_examples=25, deadline=None)
 def test_matmul_property_sweep(m, k, n):

@@ -22,6 +22,7 @@ def test_mode_dtypes():
     assert mode_dot(a, b, ComputeMode.IMPRECISE).dtype == jnp.bfloat16
 
 
+@pytest.mark.property
 @given(st.integers(1, 8), st.integers(1, 8))
 @settings(max_examples=20, deadline=None)
 def test_int8_quantization_bounded_error(oc, ic):

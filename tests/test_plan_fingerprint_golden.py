@@ -1,0 +1,61 @@
+"""Golden-stability gate for ExecutionPlan.fingerprint().
+
+The serving ProgramCache keys compiled executables on the fingerprint; a
+silent change to dispatch content (or the hash itself) would orphan every
+cached program and quietly stop deduplicating identical plans.  This test
+recomputes the fingerprints for the seed networks and compares them to
+tests/golden/plan_fingerprints.json, failing with an update hint when they
+drift.
+"""
+import importlib.util
+import json
+import os
+
+import jax
+
+jax.config.update("jax_platform_name", "cpu")
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_PATH = os.path.join(GOLDEN_DIR, "plan_fingerprints.json")
+UPDATE_HINT = ("plan dispatch content changed; if intentional, regenerate "
+               "with: PYTHONPATH=src python tests/golden/"
+               "update_fingerprints.py")
+
+
+def _load_updater():
+    spec = importlib.util.spec_from_file_location(
+        "golden_update_fingerprints",
+        os.path.join(GOLDEN_DIR, "update_fingerprints.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_plan_fingerprints_match_golden():
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    current = _load_updater().compute_fingerprints()
+
+    assert set(current) == set(golden), (
+        f"golden case set drifted (missing={set(golden) - set(current)}, "
+        f"new={set(current) - set(golden)}); {UPDATE_HINT}")
+    drifted = {name: (golden[name], current[name])
+               for name in golden if golden[name] != current[name]}
+    assert not drifted, (
+        "fingerprint drift (golden -> current): "
+        + ", ".join(f"{n}: {g} -> {c}" for n, (g, c) in sorted(drifted.items()))
+        + f"; {UPDATE_HINT}")
+
+
+def test_fingerprint_insensitive_to_cosmetics():
+    """The documented exclusions hold: reasons/origin never move the hash."""
+    import dataclasses
+    from repro.cnn import squeezenet
+    from repro.core import plan_network
+
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    plan = plan_network(net)
+    relabeled = dataclasses.replace(plan, origin="autotune", layers={
+        n: dataclasses.replace(lp, reason="cosmetic")
+        for n, lp in plan.layers.items()})
+    assert relabeled.fingerprint() == plan.fingerprint()

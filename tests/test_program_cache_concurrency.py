@@ -1,0 +1,100 @@
+"""Concurrency contract of serving.ProgramCache.get_or_build.
+
+N threads racing on the same (network, bucket) must trigger exactly one
+Stage-D compile; every caller gets the same BatchProgram object and the
+CacheStats ledger stays consistent (hits + misses == calls, compiles ==
+distinct buckets built).
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cnn import init_network_params
+from repro.core import ComputeMode, NetworkDescription, synthesize
+from repro.serving import ProgramCache
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def program():
+    net = NetworkDescription("cache_tiny", (3, 8, 8))
+    net.conv("c1", 4, 3, padding="SAME", inputs=("input",))
+    net.relu("r1")
+    net.flatten("f")
+    net.dense("d1", 4)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    return synthesize(net, params, forced_mode=ComputeMode.RELAXED)
+
+
+def _hammer(cache, program, buckets, n_threads):
+    """Race n_threads through get_or_build; returns results per thread."""
+    barrier = threading.Barrier(n_threads)
+    results, errors = [None] * n_threads, []
+
+    def worker(i):
+        try:
+            barrier.wait(timeout=30.0)
+            results[i] = cache.get_or_build(program, buckets[i])
+        except Exception as e:                    # surface, don't deadlock
+            errors.append((i, e))
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120.0)
+    assert not errors, errors
+    assert not any(t.is_alive() for t in threads)
+    return results
+
+
+def test_same_bucket_compiles_exactly_once(program):
+    n = 8
+    cache = ProgramCache()
+    cache.admit(program)
+    results = _hammer(cache, program, [4] * n, n)
+
+    first = results[0]
+    assert all(r is first for r in results)       # one object, shared
+    assert cache.stats.stage_d_compiles == 1      # exactly one build
+    assert cache.stats.misses == 1
+    assert cache.stats.hits == n - 1
+    assert cache.stats.requests == n
+    assert len(cache) == 1
+    assert program.stage_d_compiles == 1          # program-side ledger agrees
+
+
+def test_mixed_buckets_compile_once_each(program):
+    buckets = [1, 2, 4] * 4                       # 12 calls over 3 buckets
+    cache = ProgramCache()
+    cache.admit(program)
+    results = _hammer(cache, program, buckets, len(buckets))
+
+    by_bucket = {}
+    for b, r in zip(buckets, results):
+        by_bucket.setdefault(b, set()).add(id(r))
+        assert r.batch == b
+    assert all(len(ids) == 1 for ids in by_bucket.values())
+    assert cache.stats.stage_d_compiles == 3
+    assert cache.stats.misses == 3
+    assert cache.stats.hits == len(buckets) - 3
+    assert len(cache) == 3
+
+    # results stay functionally correct after the race
+    x = np.zeros((4, *program.net.input_shape), np.float32)
+    out = cache.get_or_build(program, 4)(x)
+    assert out.shape == (4, 4)
+
+
+def test_get_alias_shares_entries(program):
+    """The historical ``get`` name is the same method as get_or_build."""
+    cache = ProgramCache()
+    cache.admit(program)
+    a = cache.get(program, 2)
+    b = cache.get_or_build(program, 2)
+    assert a is b
+    assert cache.stats.stage_d_compiles == 1 and cache.stats.hits == 1

@@ -1,0 +1,220 @@
+"""Fixed-point synthesis loop + final validation gate (DESIGN.md §7).
+
+Three contracts pinned here:
+
+1. the plan/mode loop converges within the iteration cap (and breaks
+   cycles deterministically);
+2. ``synthesize(..., max_degradation=d)`` never returns a program whose
+   measured degradation on the calibration set exceeds ``d`` — even when
+   Stage C's probes are (adversarially) wrong, the final gate re-measures
+   the *emitted* dispatch path and falls back toward all-PRECISE;
+3. with ``autotune=True``, impl timings are (re)taken under the final
+   Stage-C modes, not the static plan's PRECISE defaults (the PR 2 review
+   regression).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.synthesizer as synthesizer_mod
+from repro.core import layer_ops
+from repro.core.mode_selector import ModeSelectionReport
+from repro.core.planner import autotune_plan as real_autotune_plan
+from repro.core import (MAX_SYNTHESIS_ITERATIONS, ComputeMode, IMPL_XLA,
+                        NetworkDescription, plan_network, run_network,
+                        synthesize)
+from repro.cnn import init_network_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+N_CLASSES = 4
+
+
+def tiny_net(name="tiny_fp"):
+    net = NetworkDescription(name, (3, 8, 8))
+    net.conv("c1", 8, 3, padding="SAME", inputs=("input",))
+    net.relu("r1")
+    net.conv("c2", 8, 3, padding="SAME")
+    net.flatten("f")
+    net.dense("d1", N_CLASSES)
+    return net
+
+
+@pytest.fixture()
+def tiny():
+    net = tiny_net()
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (12, 3, 8, 8))
+    labels = jnp.argmax(run_network(net, params, x), -1)
+    # precondition for the gate tests: a degenerate all-one-class label set
+    # would let a constant-output program score reference accuracy
+    assert len(set(np.asarray(labels).tolist())) > 1
+    return net, params, x, labels
+
+
+# ---------------------------------------------------------------- loop ------
+def test_fixed_point_converges_within_cap(tiny):
+    net, params, x, labels = tiny
+    prog = synthesize(net, params, validation=(x, labels),
+                      max_degradation=0.25)
+    r = prog.synthesis_report
+    assert r is not None and r.converged and not r.tie_broken
+    assert 1 <= len(r.iterations) <= MAX_SYNTHESIS_ITERATIONS
+    # the shipped plan is the one the last iteration recorded
+    assert prog.plan.fingerprint() == r.iterations[-1].plan_fingerprint
+    # ... and the one the gate validated
+    assert r.validated and r.final_validation.passed
+    assert r.final_validation.plan_fingerprint == prog.plan.fingerprint()
+    assert r.final_validation.modes == prog.modes
+
+    # Acceptance contract, re-measured independently on the emitted path:
+    # degradation of the returned program vs an all-PRECISE program.
+    precise = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
+    acc = lambda p: float(jnp.mean(  # noqa: E731
+        (jnp.argmax(p.infer(x), -1) == labels).astype(jnp.float32)))
+    assert acc(precise) - acc(prog) <= 0.25 + 1e-9
+
+
+def test_max_iterations_validated():
+    net = tiny_net()
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="max_iterations"):
+        synthesize(net, params, max_iterations=0)
+
+
+def test_cycle_broken_deterministically(tiny, monkeypatch):
+    """An oscillating Stage C (RELAXED <-> IMPRECISE, never a fixed point)
+    must terminate via the deterministic tie-break: among the states in the
+    cycle, the smallest (fingerprint, modes) sort key wins."""
+    net, params, x, labels = tiny
+    calls = {"n": 0}
+
+    def oscillating_refine(plan, layer_names, evaluate_plan, *,
+                           max_degradation=0.0, allow_int8=False,
+                           reference=None):
+        calls["n"] += 1
+        mode = (ComputeMode.RELAXED if calls["n"] % 2
+                else ComputeMode.IMPRECISE)
+        modes = {n: mode for n in layer_names}
+        probed = plan.with_modes(modes)
+        # perturb the probed plan's u so it never equals the re-planned
+        # plan — forces the loop past the ship-what-you-probed shortcut
+        first = layer_names[0]
+        probed = probed.with_layer(first, dataclasses.replace(
+            probed.for_layer(first), u=99))
+        return (ModeSelectionReport(1.0, 1.0, modes, 1, ["oscillator"]),
+                probed)
+
+    monkeypatch.setattr(synthesizer_mod, "refine_plan", oscillating_refine)
+    prog = synthesize(net, params, validation=(x, labels),
+                      max_degradation=1.0)
+    r = prog.synthesis_report
+    assert r.tie_broken and not r.converged
+    assert len(r.iterations) == 3          # A, B, A-again -> cycle detected
+
+    # expected winner: min (fingerprint, modes-key) between the two states
+    def state(mode):
+        modes = {n: mode for n in net.inexactable_layers}
+        plan = plan_network(net, modes=modes)
+        return (plan.fingerprint(),
+                tuple(sorted((n, m.value) for n, m in modes.items()))), mode
+    expected_key, expected_mode = min(
+        [state(ComputeMode.RELAXED), state(ComputeMode.IMPRECISE)])
+    assert prog.plan.fingerprint() == expected_key[0]
+    assert all(m is expected_mode for m in prog.modes.values())
+    # second synthesis run picks the identical winner (determinism)
+    calls["n"] = 0
+    prog2 = synthesize(net, params, validation=(x, labels),
+                       max_degradation=1.0)
+    assert prog2.plan.fingerprint() == prog.plan.fingerprint()
+
+
+# ---------------------------------------------------------------- gate ------
+def test_validation_gate_falls_back_to_precise(tiny, monkeypatch):
+    """Regression for the PR 2 review gap: Stage C claims a mode is free,
+    but the *emitted* program degrades.  The old single-pass synthesize
+    shipped the over-budget mode; the gate must measure the emitted
+    dispatch path, reject it, and demote to all-PRECISE."""
+    net, params, x, labels = tiny
+
+    # adversarially optimistic Stage C: "all-IMPRECISE costs nothing"
+    def optimistic_refine(plan, layer_names, evaluate_plan, *,
+                          max_degradation=0.0, allow_int8=False,
+                          reference=None):
+        modes = {n: ComputeMode.IMPRECISE for n in layer_names}
+        return (ModeSelectionReport(1.0, 1.0, modes, 1, ["optimist"]),
+                plan.with_modes(modes))
+    monkeypatch.setattr(synthesizer_mod, "refine_plan", optimistic_refine)
+
+    # ... while the real emitted program collapses under inexact modes
+    real_conv = layer_ops.CONV_IMPLS[IMPL_XLA]
+
+    def collapsing_conv(layer, plan, p, xin):
+        out = real_conv(layer, plan, p, xin)
+        return out if plan.mode is ComputeMode.PRECISE \
+            else jnp.zeros_like(out)
+    monkeypatch.setitem(layer_ops.CONV_IMPLS, IMPL_XLA, collapsing_conv)
+
+    prog = synthesize(net, params, validation=(x, labels),
+                      max_degradation=0.0)
+    r = prog.synthesis_report
+
+    # the gate caught the over-budget candidate ...
+    assert r.validations[0].passed is False
+    assert r.validations[0].degradation > 0.0
+    # ... walked the fallback ladder IMPRECISE -> RELAXED -> PRECISE ...
+    assert len(r.fallbacks) == 2
+    assert all(m is ComputeMode.PRECISE for m in prog.modes.values())
+    # ... and the returned program meets the budget on the emitted path
+    assert r.validated and r.final_validation.degradation <= 1e-9
+    # prepared weights match the demoted modes (f32, not bf16)
+    for l in net.param_layers:
+        assert prog.prepared[l.name]["w"].dtype == jnp.float32
+
+
+# ------------------------------------------------------------- autotune -----
+def test_autotune_timed_under_final_modes(tiny, monkeypatch):
+    """Regression for the PR 2 autotune-ordering gap: with autotune inside
+    the fixed-point loop, the last measured pass must time candidate impls
+    under the final Stage-C modes.  Spied at both levels: the plan handed
+    to autotune_plan, and the modes the impl registry actually executes
+    during its timing runs."""
+    net, params, x, labels = tiny
+    autotune_modes = []          # per call: modes of the plan handed in
+    registry_modes = []          # per call: modes seen by the conv impl
+
+    def spy_autotune(net_, params_, x_, plan, **kw):
+        autotune_modes.append(
+            {n: plan.for_layer(n).mode for n in net_.inexactable_layers})
+        seen = []
+        real_impl = layer_ops.CONV_IMPLS[IMPL_XLA]
+
+        def recording_conv(layer, lp, p, xin):
+            seen.append(lp.mode)
+            return real_impl(layer, lp, p, xin)
+        layer_ops.CONV_IMPLS[IMPL_XLA] = recording_conv
+        try:
+            out = real_autotune_plan(net_, params_, x_, plan, reps=1)
+        finally:
+            layer_ops.CONV_IMPLS[IMPL_XLA] = real_impl
+        registry_modes.append(seen)
+        return out
+
+    monkeypatch.setattr(synthesizer_mod, "autotune_plan", spy_autotune)
+    prog = synthesize(net, params, validation=(x, labels),
+                      max_degradation=0.25, autotune=True)
+
+    assert len(autotune_modes) >= 2
+    # first pass: the static plan's PRECISE defaults (the old behavior —
+    # now only the warm-up round)
+    assert all(m is ComputeMode.PRECISE for m in autotune_modes[0].values())
+    # last pass: the modes that actually ship
+    assert autotune_modes[-1] == prog.modes
+    assert any(m is not ComputeMode.PRECISE for m in prog.modes.values())
+    # and the impl registry executed its timing runs under those modes
+    assert any(m is not ComputeMode.PRECISE for m in registry_modes[-1])
+    assert prog.synthesis_report.converged
+    assert prog.plan.origin == "autotune"
