@@ -30,6 +30,7 @@ REQUIRED_METRICS: Dict[str, List[str]] = {
     "serving_throughput": ["sustained_imgs_per_s", "latency_p50_ms",
                            "latency_p95_ms"],
     "table3_vs_klp_flp": ["olp_over_flp_speedup"],
+    "device_sweep": ["profiles", "divergent_layers", "distinct_fingerprints"],
 }
 
 

@@ -32,14 +32,19 @@ from dataclasses import dataclass
 from typing import Dict, Optional
 
 from repro.configs import get_config
+from repro.device import TPU_V5E, DeviceProfile
 from repro.launch.specs import SHAPES, shape_skipped, window_override_for
 from repro.nn.config import ModelConfig
 from repro.nn.model import active_params, num_params
 
-# --- TPU v5e constants (per chip) ---
-PEAK_FLOPS = 197e12          # bf16
-HBM_BW = 819e9               # bytes/s
-LINK_BW = 50e9               # bytes/s per ICI link
+# --- Device: one profile supplies every per-chip hardware number (the
+# same object the planner's cost rules read — no sync-by-comment).
+PROFILE: DeviceProfile = TPU_V5E
+PEAK_FLOPS = PROFILE.peak_flops_bf16
+HBM_BW = PROFILE.hbm_bandwidth
+LINK_BW = PROFILE.link_bandwidth     # bytes/s per ICI link
+
+# --- Topology (deployment choice, not a hardware constant) ---
 CHIPS = 256                  # single-pod 16x16
 TP = 16                      # model-parallel width
 DP = 16                      # data-parallel width

@@ -19,8 +19,11 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
+from ..device.profile import LANE_WIDTH
+
 # TPU lane width: the natural ``u`` for map-major grouping on this hardware.
-LANES = 128
+# Declared once in repro.device.profile; re-exported here for the layout math.
+LANES = LANE_WIDTH
 
 
 def num_groups(channels: int, u: int = LANES) -> int:

@@ -26,6 +26,7 @@ from dataclasses import dataclass, field, replace
 from typing import (TYPE_CHECKING, Dict, Iterable, Iterator, List, Mapping,
                     Optional, Tuple)
 
+from ..device.profile import DEFAULT_PROFILE, DeviceProfile
 from .layout import LANES
 from .parallelism import Parallelism
 from .precision import ComputeMode
@@ -48,16 +49,30 @@ class LayerPlan:
     mode: ComputeMode = ComputeMode.PRECISE
     u: int = LANES                    # map-major channel-group width
     reason: str = ""                  # planner cost-rule (report/debugging)
+    #: VMEM block budget (bytes) of the device this plan targets; None =
+    #: the default profile's budget.  The runtime envelope guard in
+    #: ``conv2d_mapmajor`` reads it so dispatch-time fallback agrees with
+    #: plan-time rule 1 per device.  Part of ``cache_key`` (as the
+    #: effective dispatch value): the guard branches Pallas-vs-XLA on it
+    #: at compile time, so two plans differing only here can compile
+    #: different programs.
+    vmem_budget: Optional[int] = None
 
     def with_mode(self, mode: ComputeMode) -> "LayerPlan":
         return replace(self, mode=mode)
 
     @property
-    def cache_key(self) -> Tuple[str, str, str, int]:
+    def cache_key(self) -> Tuple[str, str, str, int, int]:
         """The execution-relevant projection of this plan.  ``reason`` is
         documentation, not dispatch — two plans that differ only in their
-        cost-rule notes compile to the same program."""
-        return (self.impl, self.parallelism.value, self.mode.value, self.u)
+        cost-rule notes compile to the same program.  ``vmem_budget``
+        enters as the value dispatch actually uses (None means the
+        default profile's budget), so an explicit default and an
+        unspecified one still alias."""
+        vb = self.vmem_budget if self.vmem_budget is not None \
+            else DEFAULT_PROFILE.vmem_budget
+        return (self.impl, self.parallelism.value, self.mode.value, self.u,
+                vb)
 
     def describe(self) -> str:
         bits = [self.impl, self.parallelism.value, self.mode.value,
@@ -75,6 +90,12 @@ class ExecutionPlan:
     net_name: str
     layers: Dict[str, LayerPlan] = field(default_factory=dict)
     origin: str = "planner"           # "planner" | "uniform" | "autotune"
+    #: The device the plan was synthesized *for* — the cost model's input.
+    #: Part of :meth:`fingerprint`: a plan drawn for one device must never
+    #: alias a plan drawn for another, even when the per-layer choices
+    #: happen to coincide today (they would silently diverge on the next
+    #: re-plan, and cached executables embed device-tuned routing).
+    profile: DeviceProfile = DEFAULT_PROFILE
 
     def for_layer(self, name: str) -> LayerPlan:
         return self.layers.get(name, DEFAULT_LAYER_PLAN)
@@ -90,12 +111,14 @@ class ExecutionPlan:
         new = dict(self.layers)
         for name, mode in modes.items():
             new[name] = new.get(name, DEFAULT_LAYER_PLAN).with_mode(mode)
-        return ExecutionPlan(self.net_name, new, origin=self.origin)
+        return ExecutionPlan(self.net_name, new, origin=self.origin,
+                             profile=self.profile)
 
     def with_layer(self, name: str, plan: LayerPlan) -> "ExecutionPlan":
         new = dict(self.layers)
         new[name] = plan
-        return ExecutionPlan(self.net_name, new, origin=self.origin)
+        return ExecutionPlan(self.net_name, new, origin=self.origin,
+                             profile=self.profile)
 
     @property
     def modes(self) -> Dict[str, ComputeMode]:
@@ -104,20 +127,25 @@ class ExecutionPlan:
     # -- identity -----------------------------------------------------------
     def fingerprint(self) -> str:
         """Stable content hash of everything that changes the compiled
-        program: the network name and each layer's ``cache_key``.
+        program: the network name, the target device's
+        :meth:`~repro.device.DeviceProfile.identity`, and each layer's
+        ``cache_key``.
 
         ``origin`` and per-layer ``reason`` strings are deliberately
         excluded — they describe *why* a plan was chosen, not *what* it
         executes, so a planner plan and a hand-written plan with identical
         dispatch share a fingerprint (and therefore share ProgramCache
-        entries — see serving/program_cache.py).  Layer order does not
-        matter: entries are hashed sorted by name.
+        entries — see serving/program_cache.py).  The device profile *is*
+        included: the ProgramCache must never serve a plan synthesized for
+        a different device.  Layer order does not matter: entries are
+        hashed sorted by name.
         """
         h = hashlib.sha256()
         h.update(self.net_name.encode())
+        h.update(f"@{self.profile.identity()}".encode())
         for name in sorted(self.layers):
-            impl, par, mode, u = self.layers[name].cache_key
-            h.update(f"|{name}={impl},{par},{mode},{u}".encode())
+            impl, par, mode, u, vb = self.layers[name].cache_key
+            h.update(f"|{name}={impl},{par},{mode},{u},vb{vb}".encode())
         return h.hexdigest()[:16]
 
     # -- reporting ----------------------------------------------------------
@@ -136,7 +164,8 @@ class ExecutionPlan:
                 backend: str = "xla",
                 parallelism: Parallelism = Parallelism.OLP,
                 modes: Optional[Mapping[str, ComputeMode]] = None,
-                u: int = LANES) -> "ExecutionPlan":
+                u: int = LANES,
+                profile: DeviceProfile = DEFAULT_PROFILE) -> "ExecutionPlan":
         """Lower the deprecated global (backend, parallelism) flag pair to a
         uniform per-layer plan reproducing the historical dispatch exactly:
 
@@ -167,8 +196,9 @@ class ExecutionPlan:
             else:
                 impl = IMPL_XLA
             layers[layer.name] = LayerPlan(impl=impl, parallelism=parallelism,
-                                           mode=mode, u=u, reason=why)
-        return cls(net.name, layers, origin="uniform")
+                                           mode=mode, u=u, reason=why,
+                                           vmem_budget=profile.vmem_budget)
+        return cls(net.name, layers, origin="uniform", profile=profile)
 
 
 def enforce_precise_xla(plan: ExecutionPlan,

@@ -15,7 +15,8 @@ cost model, with an optional *measured* autotune refinement:
                              paper §IV-B).
   Rule 3 (roofline)          Estimate arithmetic intensity and the
                              compute/memory roofline terms (same model as
-                             benchmarks/roofline.py, TPU v5e constants).
+                             benchmarks/roofline.py, constants from the
+                             target :class:`~repro.device.DeviceProfile`).
                              Compute-bound layers with MXU-filling channel
                              counts go to the map-major Pallas kernel;
                              memory-bound or narrow layers stay on XLA,
@@ -39,22 +40,30 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..device import DEFAULT_PROFILE, DeviceProfile
 from .layout import LANES
 from .network import Layer, NetworkDescription
 from .parallelism import Parallelism
 from .plan import (IMPL_PALLAS, IMPL_XLA, ExecutionPlan, LayerPlan)
 from .precision import ComputeMode
 
-# TPU v5e per-chip roofline constants (kept in sync with
-# benchmarks/roofline.py, which owns the full model).
-PEAK_FLOPS = 197e12          # bf16 FLOP/s
-HBM_BW = 819e9               # bytes/s
-#: FLOPs/byte at which compute time equals memory time.
-RIDGE = PEAK_FLOPS / HBM_BW
+#: Deprecated aliases for the historical hard-coded TPU v5e roofline
+#: constants.  The numbers now live in :data:`repro.device.TPU_V5E` (the
+#: default profile); per-device planning reads ``PlannerConfig.profile``
+#: instead.  Kept so legacy imports keep resolving — do not add new uses.
+PEAK_FLOPS = DEFAULT_PROFILE.peak_flops_bf16     # deprecated: use profile
+HBM_BW = DEFAULT_PROFILE.hbm_bandwidth           # deprecated: use profile
+#: FLOPs/byte at which compute time equals memory time (deprecated alias).
+RIDGE = DEFAULT_PROFILE.ridge("bf16")
 
 
 @dataclass(frozen=True)
 class PlannerConfig:
+    #: The device the plan targets: every hardware number the cost rules
+    #: consume (peak FLOP/s, bandwidth, ridge point, VMEM envelope budget)
+    #: comes from here.  Defaults to the builtin tpu_v5e profile — the
+    #: historical hard-coded target.
+    profile: DeviceProfile = DEFAULT_PROFILE
     u_max: int = LANES
     u_min: int = 8
     #: Minimum min(Cin, Cout) for the MXU to be worth feeding.
@@ -67,17 +76,19 @@ class PlannerConfig:
     dense_pallas_min_n: int = 128
     batch: int = 1
     #: Whether rule 3 may route layers to the Pallas kernels.  None =
-    #: decide from the platform: only a real TPU compiles them; elsewhere
-    #: they run in interpret mode (a simulator), which is never the fast
-    #: path, so the planner keeps XLA.  Force True to exercise the kernels
-    #: (tests, kernel debugging) or False to pin everything to XLA.
+    #: decide from the target and the platform: the profile must support
+    #: compiled Pallas and only a real TPU compiles it; elsewhere the
+    #: kernels run in interpret mode (a simulator), which is never the
+    #: fast path, so the planner keeps XLA.  Force True to exercise the
+    #: kernels (tests, kernel debugging, cross-device what-if sweeps) or
+    #: False to pin everything to XLA.
     allow_pallas: Optional[bool] = None
 
     @property
     def pallas_enabled(self) -> bool:
         if self.allow_pallas is not None:
             return self.allow_pallas
-        return jax.default_backend() == "tpu"
+        return self.profile.supports_pallas and jax.default_backend() == "tpu"
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +140,8 @@ def trace_shapes(net: NetworkDescription) -> Dict[str, Tuple[int, ...]]:
 class LayerCost:
     flops: float
     bytes: float
+    #: The device whose roofline turns counts into seconds.
+    profile: DeviceProfile = DEFAULT_PROFILE
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -136,11 +149,11 @@ class LayerCost:
 
     @property
     def compute_seconds(self) -> float:
-        return self.flops / PEAK_FLOPS
+        return self.flops / self.profile.peak_flops("bf16")
 
     @property
     def memory_seconds(self) -> float:
-        return self.bytes / HBM_BW
+        return self.bytes / self.profile.hbm_bandwidth
 
     @property
     def dominant(self) -> str:
@@ -149,7 +162,8 @@ class LayerCost:
 
 
 def conv_cost(cin: int, h: int, w: int, layer: Layer, batch: int,
-              bytes_per_el: int = 2) -> LayerCost:
+              bytes_per_el: int = 2,
+              profile: DeviceProfile = DEFAULT_PROFILE) -> LayerCost:
     ho = _spatial_out(h, layer.kernel, layer.stride, layer.padding)
     wo = _spatial_out(w, layer.kernel, layer.stride, layer.padding)
     m, k = layer.out_channels, layer.kernel
@@ -157,13 +171,14 @@ def conv_cost(cin: int, h: int, w: int, layer: Layer, batch: int,
     byts = bytes_per_el * (batch * cin * h * w          # input read
                            + m * cin * k * k            # weights read
                            + batch * m * ho * wo)       # output write
-    return LayerCost(flops, byts)
+    return LayerCost(flops, byts, profile)
 
 
-def dense_cost(k: int, n: int, batch: int, bytes_per_el: int = 2) -> LayerCost:
+def dense_cost(k: int, n: int, batch: int, bytes_per_el: int = 2,
+               profile: DeviceProfile = DEFAULT_PROFILE) -> LayerCost:
     flops = 2.0 * batch * k * n
     byts = bytes_per_el * (batch * k + k * n + batch * n)
-    return LayerCost(flops, byts)
+    return LayerCost(flops, byts, profile)
 
 
 def _pow2_at_least(n: int) -> int:
@@ -174,67 +189,77 @@ def _pow2_at_least(n: int) -> int:
 
 
 def _choose_u(cin: int, cout: int, cfg: PlannerConfig) -> int:
+    u_max = min(cfg.u_max, cfg.profile.lane_width)
     widest = max(cin, cout)
-    if widest >= cfg.u_max // 2:
-        return cfg.u_max
+    if widest >= u_max // 2:
+        return u_max
     return max(cfg.u_min, _pow2_at_least(widest))
 
 
 def _plan_conv(layer: Layer, cin: int, h: int, w: int,
                cfg: PlannerConfig, mode: ComputeMode) -> LayerPlan:
-    cost = conv_cost(cin, h, w, layer, cfg.batch)
+    cost = conv_cost(cin, h, w, layer, cfg.batch, profile=cfg.profile)
     u = _choose_u(cin, layer.out_channels, cfg)
     ai = cost.arithmetic_intensity
+    ridge = cfg.profile.ridge("bf16")
+
+    def mk(impl: str, reason: str) -> LayerPlan:
+        return LayerPlan(impl=impl, parallelism=Parallelism.OLP, mode=mode,
+                         u=u, reason=reason,
+                         vmem_budget=cfg.profile.vmem_budget)
 
     from ..kernels.conv_mapmajor.ops import fits_vmem
-    if not fits_vmem(h, w, layer.kernel, layer.stride, layer.padding, u, mode):
-        return LayerPlan(
-            impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode, u=u,
-            reason=f"rule1: {h}x{w} input block over VMEM envelope")
+    if not fits_vmem(h, w, layer.kernel, layer.stride, layer.padding, u, mode,
+                     budget=cfg.profile.vmem_budget):
+        return mk(IMPL_XLA, f"rule1: {h}x{w} input block over VMEM envelope "
+                            f"({cfg.profile.name})")
 
     if mode is ComputeMode.PRECISE:
         # Joint invariant (mode_selector.refine_plan): the vector-MAC kernel
         # is reserved for inexact modes; PRECISE is XLA's f32 HIGHEST path.
-        return LayerPlan(
-            impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode, u=u,
-            reason="precise: f32 HIGHEST path (vector MAC is inexact-only)")
+        return mk(IMPL_XLA,
+                  "precise: f32 HIGHEST path (vector MAC is inexact-only)")
 
     if not cfg.pallas_enabled:
-        return LayerPlan(
-            impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode, u=u,
-            reason=f"rule3: Pallas interpret-only on {jax.default_backend()}")
+        return mk(IMPL_XLA,
+                  f"rule3: Pallas interpret-only on {jax.default_backend()}")
 
     narrow = min(cin, layer.out_channels) < cfg.min_channels_for_pallas
-    compute_bound = ai >= cfg.compute_bound_fraction * RIDGE
+    compute_bound = ai >= cfg.compute_bound_fraction * ridge
     if compute_bound and not narrow:
-        return LayerPlan(
-            impl=IMPL_PALLAS, parallelism=Parallelism.OLP, mode=mode, u=u,
-            reason=f"rule3: compute-bound (AI={ai:.0f} >= ridge {RIDGE:.0f})")
+        return mk(IMPL_PALLAS,
+                  f"rule3: compute-bound (AI={ai:.0f} >= ridge {ridge:.0f}, "
+                  f"{cfg.profile.name})")
     why = (f"rule3: narrow ({min(cin, layer.out_channels)} ch)" if narrow
-           else f"rule3: memory-bound (AI={ai:.0f} < ridge {RIDGE:.0f})")
-    return LayerPlan(impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode,
-                     u=u, reason=why)
+           else f"rule3: memory-bound (AI={ai:.0f} < ridge {ridge:.0f}, "
+                f"{cfg.profile.name})")
+    return mk(IMPL_XLA, why)
 
 
 def _plan_dense(layer: Layer, in_features: int, cfg: PlannerConfig,
                 mode: ComputeMode) -> LayerPlan:
-    cost = dense_cost(in_features, layer.out_channels, cfg.batch)
+    cost = dense_cost(in_features, layer.out_channels, cfg.batch,
+                      profile=cfg.profile)
     u = _choose_u(in_features, layer.out_channels, cfg)
+
+    def mk(impl: str, reason: str) -> LayerPlan:
+        return LayerPlan(impl=impl, parallelism=Parallelism.OLP, mode=mode,
+                         u=u, reason=reason,
+                         vmem_budget=cfg.profile.vmem_budget)
+
     if (mode is not ComputeMode.PRECISE and cfg.pallas_enabled
             and in_features >= cfg.dense_pallas_min_k
             and layer.out_channels >= cfg.dense_pallas_min_n):
-        why = (f"rule3: MXU-filling matmul K={in_features} "
-               f"N={layer.out_channels} (AI={cost.arithmetic_intensity:.1f})")
-        return LayerPlan(impl=IMPL_PALLAS, parallelism=Parallelism.OLP,
-                         mode=mode, u=u, reason=why)
+        return mk(IMPL_PALLAS,
+                  f"rule3: MXU-filling matmul K={in_features} "
+                  f"N={layer.out_channels} (AI={cost.arithmetic_intensity:.1f})")
     if mode is ComputeMode.PRECISE:
         why = "precise: f32 HIGHEST path (vector MAC is inexact-only)"
     elif not cfg.pallas_enabled:
         why = f"rule3: Pallas interpret-only on {jax.default_backend()}"
     else:
         why = f"rule3: small matmul K={in_features} N={layer.out_channels}"
-    return LayerPlan(impl=IMPL_XLA, parallelism=Parallelism.OLP, mode=mode,
-                     u=u, reason=why)
+    return mk(IMPL_XLA, why)
 
 
 def plan_network(net: NetworkDescription, *,
@@ -258,7 +283,8 @@ def plan_network(net: NetworkDescription, *,
             layers[l.name] = _plan_dense(l, in_features, cfg, mode)
         else:
             layers[l.name] = LayerPlan(mode=mode, reason="structural")
-    return ExecutionPlan(net.name, layers, origin="planner")
+    return ExecutionPlan(net.name, layers, origin="planner",
+                         profile=cfg.profile)
 
 
 # ---------------------------------------------------------------------------
@@ -313,12 +339,14 @@ def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
         if l.kind == "conv" and IMPL_PALLAS in layer_candidates:
             _, _, h_in, w_in = x_in.shape
             if not fits_vmem(h_in, w_in, l.kernel, l.stride, l.padding,
-                             base.u, base.mode):
+                             base.u, base.mode,
+                             budget=plan.profile.vmem_budget):
                 layer_candidates.remove(IMPL_PALLAS)
         timings: List[Tuple[float, str]] = []
         for impl in layer_candidates:
             cand = LayerPlan(impl=impl, parallelism=base.parallelism,
-                             mode=base.mode, u=base.u)
+                             mode=base.mode, u=base.u,
+                             vmem_budget=base.vmem_budget)
             run = jax.jit(lambda a, l=l, cand=cand: apply_layer(
                 l, cand, params.get(l.name), [a]))
             try:
@@ -330,6 +358,8 @@ def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
         t_best, impl_best = min(timings)
         tuned[l.name] = LayerPlan(
             impl=impl_best, parallelism=base.parallelism, mode=base.mode,
-            u=base.u, reason=f"autotune: {t_best * 1e6:.0f}us best of "
-                             f"{len(timings)}")
-    return ExecutionPlan(net.name, tuned, origin="autotune")
+            u=base.u, vmem_budget=base.vmem_budget,
+            reason=f"autotune: {t_best * 1e6:.0f}us best of "
+                   f"{len(timings)}")
+    return ExecutionPlan(net.name, tuned, origin="autotune",
+                         profile=plan.profile)

@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..device import DeviceProfile, resolve_profile
 from .layout import LANES, weights_to_map_major
 from .mode_selector import ModeSelectionReport, refine_plan
 from .network import NetworkDescription, run_network
@@ -175,6 +176,9 @@ class SynthesizedProgram:
 
     def report(self) -> str:
         lines = [f"== Cappuccino synthesis report: {self.net.name} ==",
+                 f"device           : {self.plan.profile.name} "
+                 f"[{self.plan.profile.source}] "
+                 f"(ridge {self.plan.profile.ridge():.0f} FLOPs/B)",
                  f"parallelism      : {self.parallelism.value} (thread level)"
                  f" + vectorized MAC (intra-thread, u={self.vector_width})",
                  f"layers           : {len(self.net.layers)}"
@@ -290,6 +294,7 @@ def synthesize(net: NetworkDescription,
                *,
                max_degradation: float = 0.0,
                allow_int8: bool = False,
+               device: "Optional[str | DeviceProfile]" = None,
                plan: Optional[ExecutionPlan] = None,
                planner_config: Optional[PlannerConfig] = None,
                autotune: bool = False,
@@ -301,7 +306,11 @@ def synthesize(net: NetworkDescription,
     """Run the full Cappuccino pipeline and return the synthesized program.
 
     Stage A emits an :class:`ExecutionPlan`: pass ``plan=`` to supply one,
-    or let the planner build it.  ``backend=`` / ``parallelism=`` are the
+    or let the planner build it.  ``device=`` selects the synthesis target —
+    a :class:`~repro.device.DeviceProfile`, a registry name (``"tpu_v4"``),
+    or ``"auto"`` (calibrated/cached profile for this host, deterministic
+    builtin fallback off-TPU); every cost rule and the plan fingerprint are
+    taken under that device.  ``backend=`` / ``parallelism=`` are the
     deprecated global flags, lowered to a uniform plan (legacy call sites
     keep their exact historical dispatch).
 
@@ -325,6 +334,29 @@ def synthesize(net: NetworkDescription,
     if max_iterations < 1:
         raise ValueError(f"max_iterations must be >= 1, got {max_iterations}")
 
+    # Device selection: the target profile flows into the planner config
+    # (cost rules) and every plan built here (fingerprint identity).
+    if device is not None:
+        profile = resolve_profile(device)
+        if plan is not None and plan.profile.identity() != profile.identity():
+            raise ValueError(
+                f"plan= was drawn for device {plan.profile.name!r} but "
+                f"device= names {profile.name!r}; re-plan for the target "
+                "or drop one of the arguments")
+        planner_config = dataclasses.replace(planner_config or PlannerConfig(),
+                                             profile=profile)
+    elif planner_config is None and plan is not None:
+        # Keep the supplied plan's device sticky through re-planning.
+        planner_config = PlannerConfig(profile=plan.profile)
+    elif (plan is not None and planner_config is not None
+          and plan.profile.identity() != planner_config.profile.identity()):
+        raise ValueError(
+            f"plan= was drawn for device {plan.profile.name!r} but "
+            f"planner_config= targets {planner_config.profile.name!r}; "
+            "re-planning would silently switch devices — align the two "
+            "profiles (dataclasses.replace(planner_config, "
+            "profile=plan.profile)) or re-plan for the target")
+
     # Stage A: primary program synthesis -> ExecutionPlan artifact.
     if plan is None:
         if backend is not None or parallelism is not None:
@@ -334,7 +366,9 @@ def synthesize(net: NetworkDescription,
                 stacklevel=2)
             plan = ExecutionPlan.uniform(
                 net, backend=backend or "xla",
-                parallelism=parallelism or Parallelism.OLP)
+                parallelism=parallelism or Parallelism.OLP,
+                profile=(planner_config.profile if planner_config is not None
+                         else PlannerConfig().profile))
         else:
             plan = plan_network(net, config=planner_config)
     tune_x = None

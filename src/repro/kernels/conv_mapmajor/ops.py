@@ -11,6 +11,7 @@ exactly this wrapper's :func:`fits_vmem` envelope.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,11 +20,16 @@ from ...core.layer_ops import add_bias, register_conv_impl
 from ...core.layout import LANES, from_map_major, to_map_major
 from ...core.plan import IMPL_PALLAS
 from ...core.precision import ComputeMode, resolve_weight
+from ...device.profile import DEFAULT_PROFILE
 from .conv_mapmajor import conv_mapmajor
 from .ref import pack_weights
 
 # Per-block VMEM budget for the input block (bytes); above it we fall back.
-VMEM_INPUT_BUDGET = 24 * 1024 * 1024
+# The number lives in the device profile (repro.device); this module-level
+# name is the default-profile value, kept as the runtime guard's budget and
+# as a legacy alias.  Planning against another device passes its profile's
+# budget to :func:`fits_vmem` explicitly.
+VMEM_INPUT_BUDGET = DEFAULT_PROFILE.vmem_budget
 
 
 def _pad_amounts(h, k, s, padding):
@@ -67,19 +73,24 @@ def _conv2d_mapmajor_pallas(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
 def conv2d_mapmajor(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
                     stride: int = 1, padding: str = "SAME",
                     mode: ComputeMode = ComputeMode.RELAXED,
-                    u: int = LANES, interpret: bool = True) -> jnp.ndarray:
+                    u: int = LANES, interpret: bool = True,
+                    vmem_budget: Optional[int] = None) -> jnp.ndarray:
     """NCHW in, NCHW out; map-major + Pallas OLP inside.
 
     x: (N, Cin, H, W); w: (Cout, Cin, Kh, Kw); optional bias (Cout,).
 
     Enforces the kernel's VMEM envelope: when one channel group's padded
-    input plane exceeds :data:`VMEM_INPUT_BUDGET`, the layer runs on the
+    input plane exceeds ``vmem_budget`` (the target device's block budget;
+    defaults to :data:`VMEM_INPUT_BUDGET`), the layer runs on the
     fused-XLA OLP path instead (same semantics, no VMEM ceiling).  The
-    branch is resolved on static shapes, so it is jit-transparent.
+    planned dispatch path passes the plan's device budget so this guard
+    agrees with the planner's rule 1.  The branch is resolved on static
+    shapes, so it is jit-transparent.
     """
     _, _, h, wdim = x.shape
     _, _, kh, _ = w.shape
-    if not fits_vmem(h, wdim, kh, stride, padding, u, mode):
+    if not fits_vmem(h, wdim, kh, stride, padding, u, mode,
+                     budget=vmem_budget):
         return _conv2d_xla_fallback(x, w, b, stride=stride, padding=padding,
                                     mode=mode)
     return _conv2d_mapmajor_pallas(x, w, b, stride=stride, padding=padding,
@@ -101,12 +112,19 @@ def input_block_vmem_bytes(h_pad: int, w_pad: int, u: int,
 
 
 def fits_vmem(h: int, w: int, k: int, stride: int, padding: str, u: int,
-              mode: ComputeMode) -> bool:
-    """True iff one (padded H x padded W x u) input block fits the budget."""
+              mode: ComputeMode, *, budget: Optional[int] = None) -> bool:
+    """True iff one (padded H x padded W x u) input block fits the budget.
+
+    ``budget`` defaults to the default device profile's VMEM block budget;
+    the planner passes its target profile's budget so rule 1 is evaluated
+    against the device being planned *for*, not the module default.
+    """
+    if budget is None:
+        budget = VMEM_INPUT_BUDGET
     _, p0, p1 = _pad_amounts(h, k, stride, padding)
     _, q0, q1 = _pad_amounts(w, k, stride, padding)
     return input_block_vmem_bytes(h + p0 + p1, w + q0 + q1, u, mode) \
-        <= VMEM_INPUT_BUDGET
+        <= budget
 
 
 @register_conv_impl(IMPL_PALLAS)
@@ -120,4 +138,5 @@ def _conv_pallas_planned(layer, plan, params, x):
     return conv2d_mapmajor(x, w, params.get("b") if layer.use_bias else None,
                            stride=layer.stride, padding=layer.padding,
                            mode=plan.mode, u=plan.u,
-                           interpret=jax.default_backend() != "tpu")
+                           interpret=jax.default_backend() != "tpu",
+                           vmem_budget=plan.vmem_budget)

@@ -40,7 +40,7 @@ def warm_buckets(cache: ProgramCache, program: SynthesizedProgram,
     max_batch) so no XLA compile lands inside a measured window."""
     b = 1
     while b <= max_batch:
-        cache.get(program, b)
+        cache.get_or_build(program, b)
         b *= 2
 
 

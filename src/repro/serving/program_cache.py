@@ -30,6 +30,7 @@ test and the serving benchmark both read them.
 from __future__ import annotations
 
 import threading
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, Tuple
@@ -134,8 +135,12 @@ class ProgramCache:
                 self.stats.evictions += 1
             return compiled
 
-    #: Historical name for :meth:`get_or_build` (kept for call sites).
-    get = get_or_build
+    def get(self, program: SynthesizedProgram, batch: int) -> BatchProgram:
+        """Deprecated historical name for :meth:`get_or_build`."""
+        warnings.warn(
+            "ProgramCache.get is deprecated; use get_or_build (same "
+            "semantics, honest name)", DeprecationWarning, stacklevel=2)
+        return self.get_or_build(program, batch)
 
     def __len__(self) -> int:
         with self._lock:

@@ -110,7 +110,7 @@ class SynthesisServer:
     # -- dispatch side ------------------------------------------------------
     def _dispatch(self, bucket: Bucket) -> None:
         try:
-            compiled = self.cache.get(self.program, bucket.batch)
+            compiled = self.cache.get_or_build(self.program, bucket.batch)
             x = jnp.stack([jnp.asarray(r.image, self.program.input_dtype)
                            for r in bucket.requests])
             if bucket.padding:

@@ -25,9 +25,16 @@ sys.path.insert(0, os.path.join(HERE, os.pardir, os.pardir, "src"))
 
 
 def compute_fingerprints() -> dict:
-    """name -> fingerprint for every pinned (network, config, modes) case."""
+    """name -> fingerprint for every pinned (network, config, modes) case.
+
+    Configs pin ``allow_pallas`` both ways (CPU/TPU host parity) and cover
+    two device profiles: the default tpu_v5e and tpu_v4, because the
+    fingerprint is device-keyed — the same network planned for two devices
+    must never share a fingerprint (the ProgramCache relies on it).
+    """
     from repro.cnn import alexnet, googlenet, squeezenet
     from repro.core import ComputeMode, PlannerConfig, plan_network
+    from repro.device import TPU_V4
 
     nets = {
         "alexnet_s0.1_hw67": alexnet(scale=0.1, num_classes=10, input_hw=67),
@@ -38,14 +45,17 @@ def compute_fingerprints() -> dict:
     }
     out = {}
     for name, net in nets.items():
+        relaxed = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
         for allow_pallas in (False, True):
             cfg = PlannerConfig(allow_pallas=allow_pallas)
             tag = "pallas" if allow_pallas else "xla_only"
             out[f"{name}.{tag}.precise_default"] = \
                 plan_network(net, config=cfg).fingerprint()
-            relaxed = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
             out[f"{name}.{tag}.all_relaxed"] = \
                 plan_network(net, modes=relaxed, config=cfg).fingerprint()
+        v4 = PlannerConfig(profile=TPU_V4, allow_pallas=True)
+        out[f"{name}.pallas.tpu_v4.all_relaxed"] = \
+            plan_network(net, modes=relaxed, config=v4).fingerprint()
     return out
 
 

@@ -69,3 +69,35 @@ def test_uniform_plan_unknown_backend_raises(small_net):
     net, _, _ = small_net
     with pytest.raises(ValueError, match="unknown backend"):
         ExecutionPlan.uniform(net, backend="cuda")
+
+
+def test_program_cache_get_alias_warns_and_delegates(small_net):
+    """ProgramCache.get is the deprecated name for get_or_build: it must
+    emit a DeprecationWarning and return the identical cached executable."""
+    from repro.serving import ProgramCache
+
+    net, params, _ = small_net
+    program = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
+    cache = ProgramCache()
+    cache.admit(program)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # clean name
+        built = cache.get_or_build(program, 1)
+    with pytest.warns(DeprecationWarning, match="get_or_build"):
+        aliased = cache.get(program, 1)
+    assert aliased is built
+
+
+def test_warm_buckets_is_off_the_deprecated_alias(small_net):
+    """serving.loadgen.warm_buckets migrated to get_or_build — warming must
+    not trip the alias's DeprecationWarning."""
+    from repro.serving import ProgramCache, warm_buckets
+
+    net, params, _ = small_net
+    program = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
+    cache = ProgramCache()
+    cache.admit(program)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        warm_buckets(cache, program, max_batch=2)
+    assert len(cache) == 2                     # buckets 1 and 2 compiled

@@ -47,6 +47,35 @@ def test_plan_fingerprints_match_golden():
         + f"; {UPDATE_HINT}")
 
 
+def test_golden_covers_two_devices_with_distinct_fingerprints():
+    """The golden set pins the device-keyed fingerprint: for every network,
+    the tpu_v4 plan and its tpu_v5e counterpart (same config otherwise)
+    must be present and distinct — a shared value would mean the
+    ProgramCache could serve a v5e-planned program to a v4 target."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    v4_cases = {n for n in golden if ".tpu_v4." in n}
+    assert v4_cases, f"no second-device cases in the golden set; {UPDATE_HINT}"
+    for case in v4_cases:
+        counterpart = case.replace(".tpu_v4", "")
+        assert counterpart in golden, (case, UPDATE_HINT)
+        assert golden[case] != golden[counterpart], (
+            f"{case} shares a fingerprint with {counterpart} — the device "
+            f"profile is no longer part of plan identity")
+
+
+def test_fingerprint_distinct_across_devices_live():
+    """Same check, computed live (not just pinned in the file)."""
+    from repro.cnn import squeezenet
+    from repro.core import PlannerConfig, plan_network
+    from repro.device import TPU_V4, TPU_V5E
+
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    fp5 = plan_network(net, config=PlannerConfig(profile=TPU_V5E)).fingerprint()
+    fp4 = plan_network(net, config=PlannerConfig(profile=TPU_V4)).fingerprint()
+    assert fp5 != fp4
+
+
 def test_fingerprint_insensitive_to_cosmetics():
     """The documented exclusions hold: reasons/origin never move the hash."""
     import dataclasses

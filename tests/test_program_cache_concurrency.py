@@ -91,10 +91,12 @@ def test_mixed_buckets_compile_once_each(program):
 
 
 def test_get_alias_shares_entries(program):
-    """The historical ``get`` name is the same method as get_or_build."""
+    """The deprecated ``get`` name warns but hits the same entries as
+    get_or_build — no split cache during the migration window."""
     cache = ProgramCache()
     cache.admit(program)
-    a = cache.get(program, 2)
-    b = cache.get_or_build(program, 2)
+    a = cache.get_or_build(program, 2)
+    with pytest.warns(DeprecationWarning, match="get_or_build"):
+        b = cache.get(program, 2)
     assert a is b
     assert cache.stats.stage_d_compiles == 1 and cache.stats.hits == 1

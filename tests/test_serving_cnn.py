@@ -119,13 +119,13 @@ def test_program_cache_hits_and_compiles(program):
     cache = ProgramCache()
     cache.admit(program)
     base = program.stage_d_compiles
-    a = cache.get(program, 2)
-    b = cache.get(program, 2)
+    a = cache.get_or_build(program, 2)
+    b = cache.get_or_build(program, 2)
     assert a is b                                # second call is a hit
     assert cache.stats.hits == 1 and cache.stats.misses == 1
     assert cache.stats.stage_d_compiles == 1
     assert program.stage_d_compiles == base + 1  # program-side counter agrees
-    c = cache.get(program, 4)
+    c = cache.get_or_build(program, 4)
     assert c is not a and cache.stats.stage_d_compiles == 2
 
 
@@ -142,25 +142,25 @@ def test_program_cache_distinguishes_weights(small_net, program):
     cache.admit(program)
     cache.admit(p2)
     x = jnp.ones((1, *net.input_shape))
-    out1 = np.asarray(cache.get(program, 1)(x))
-    out2 = np.asarray(cache.get(p2, 1)(x))
+    out1 = np.asarray(cache.get_or_build(program, 1)(x))
+    out2 = np.asarray(cache.get_or_build(p2, 1)(x))
     assert cache.stats.stage_d_compiles == 2 and cache.stats.hits == 0
     assert not np.array_equal(out1, out2)
 
 
 def test_program_cache_requires_admit(program):
     with pytest.raises(KeyError):
-        ProgramCache().get(program, 1)
+        ProgramCache().get_or_build(program, 1)
 
 
 def test_program_cache_lru_eviction(program):
     cache = ProgramCache(max_entries=2)
     cache.admit(program)
-    a1 = cache.get(program, 1)
-    cache.get(program, 2)
-    cache.get(program, 4)                        # evicts bucket 1
+    a1 = cache.get_or_build(program, 1)
+    cache.get_or_build(program, 2)
+    cache.get_or_build(program, 4)                        # evicts bucket 1
     assert cache.stats.evictions == 1 and len(cache) == 2
-    assert cache.get(program, 1) is not a1       # recompiled
+    assert cache.get_or_build(program, 1) is not a1       # recompiled
     assert cache.stats.stage_d_compiles == 4
 
 
