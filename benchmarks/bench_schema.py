@@ -31,6 +31,10 @@ REQUIRED_METRICS: Dict[str, List[str]] = {
                            "latency_p95_ms"],
     "table3_vs_klp_flp": ["olp_over_flp_speedup"],
     "device_sweep": ["profiles", "divergent_layers", "distinct_fingerprints"],
+    "fusion_speedup": ["googlenet_dispatches_unfused",
+                       "googlenet_dispatches_fused",
+                       "googlenet_dispatch_reduction",
+                       "googlenet_latency_speedup"],
 }
 
 

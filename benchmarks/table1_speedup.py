@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cnn import WORKLOADS, init_network_params
-from repro.core import ComputeMode, run_network, synthesize
+from repro.core import ComputeMode, ExecutionPlan, run_network, synthesize
 
 from .common import bench, csv_row
 
@@ -30,8 +30,9 @@ def run(reps: int = 8):
         params = init_network_params(net, jax.random.PRNGKey(0))
         x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, hw, hw))
 
-        baseline = jax.jit(lambda xx, net=net, p=params: run_network(
-            net, p, xx, backend="sequential"))
+        seq = ExecutionPlan.uniform(net, backend="sequential")
+        baseline = jax.jit(lambda xx, net=net, p=params, plan=seq: run_network(
+            net, p, xx, plan=plan))
         parallel = synthesize(net, params, forced_mode=ComputeMode.PRECISE).infer
         imprecise = synthesize(net, params, forced_mode=ComputeMode.IMPRECISE).infer
 

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.cnn import squeezenet, init_network_params
-from repro.core import ComputeMode, run_network, synthesize
+from repro.core import ComputeMode, ExecutionPlan, run_network, synthesize
 
 from .common import bench, csv_row
 
@@ -21,8 +21,8 @@ def run(reps: int = 8):
     net = squeezenet(scale=0.25, num_classes=100, input_hw=128)
     params = init_network_params(net, jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 128, 128))
-    baseline = jax.jit(lambda xx: run_network(net, params, xx,
-                                              backend="sequential"))
+    seq = ExecutionPlan.uniform(net, backend="sequential")
+    baseline = jax.jit(lambda xx: run_network(net, params, xx, plan=seq))
     synthesized = synthesize(net, params,
                              forced_mode=ComputeMode.IMPRECISE).infer
     rows = []

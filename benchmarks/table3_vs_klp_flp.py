@@ -41,12 +41,12 @@ def measure(reps: int = 8, *, scale: float = 0.25,
     synthesis summary (validated accuracy numbers — not latencies, so they
     ride outside the timing rows)."""
     out: List[Tuple[str, float]] = []
-    from repro.core.parallelism import conv2d
+    from repro.core.parallelism import conv_policy
     for lname, xshape, wshape, stride in LAYERS:
         x = jax.random.normal(jax.random.PRNGKey(0), xshape)
         w = jax.random.normal(jax.random.PRNGKey(1), wshape) * 0.1
         for par in (Parallelism.OLP, Parallelism.FLP, Parallelism.KLP):
-            f = jax.jit(lambda xx, ww, par=par: conv2d(
+            f = jax.jit(lambda xx, ww, par=par: conv_policy(
                 xx, ww, stride=stride, padding="SAME", mode=ComputeMode.RELAXED,
                 parallelism=par))
             t = bench(f, x, w, reps=reps)

@@ -4,7 +4,8 @@
 - precision:     inexact computing modes (§IV-C)
 - parallelism:   OLP / FLP / KLP workload allocation (§IV-A)
 - network:       network-description DAG (paper input #1)
-- plan:          per-layer execution plans (Stage A's artifact)
+- graph:         graph-pass pipeline -> fused dispatch groups (DESIGN.md §9)
+- plan:          per-layer / per-group execution plans (Stage A's artifact)
 - planner:       static cost model + measured autotune (Stage A's brain)
 - layer_ops:     the layer-op / implementation registries (the executor)
 - mode_selector: per-layer inexact-mode analysis (§IV-C) + joint refinement
@@ -13,17 +14,22 @@
 from .layout import (LANES, from_map_major, mapmajor_scatter_order, num_groups,
                      thread_to_whm, to_map_major, weights_to_map_major,
                      whm_to_thread)
+from .graph import (DEFAULT_PASSES, DispatchStats, FusedGroup, GraphProgram,
+                    canonicalize, eliminate_dead_layers, execute_graph,
+                    fuse_conv_epilogues, fuse_pointwise_chains, lower_network)
 from .layer_ops import (CONV_IMPLS as CONV_IMPL_REGISTRY, DENSE_IMPLS,
-                        LAYER_OPS, apply_layer, register_conv_impl,
-                        register_dense_impl, register_layer_op)
+                        EPILOGUE_IMPLS, LAYER_OPS, apply_group, apply_layer,
+                        register_conv_impl, register_dense_impl,
+                        register_epilogue_impl, register_layer_op)
 from .mode_selector import ModeSelectionReport, refine_plan, select_modes
 from .network import (Layer, NetworkDescription, collect_activations,
                       run_network)
 from .parallelism import (Parallelism, conv2d, conv2d_planned, conv_flp,
-                          conv_klp, conv_olp)
+                          conv_klp, conv_olp, conv_policy)
 from .plan import (DEFAULT_LAYER_PLAN, IMPL_DEFAULT, IMPL_PALLAS,
-                   IMPL_SEQUENTIAL, IMPL_XLA, ExecutionPlan, IterationRecord,
-                   LayerPlan, SynthesisReport, ValidationRecord)
+                   IMPL_SEQUENTIAL, IMPL_XLA, ExecutionPlan, GroupPlan,
+                   IterationRecord, LayerPlan, SynthesisReport,
+                   ValidationRecord)
 from .planner import (PlannerConfig, autotune_plan, plan_network,
                       trace_shapes)
 from .precision import (MODES_FASTEST_FIRST, ComputeMode, QuantizedTensor,
@@ -35,14 +41,18 @@ from .synthesizer import (MAX_SYNTHESIS_ITERATIONS, BatchProgram,
 __all__ = [
     "LANES", "from_map_major", "mapmajor_scatter_order", "num_groups",
     "thread_to_whm", "to_map_major", "weights_to_map_major", "whm_to_thread",
-    "CONV_IMPL_REGISTRY", "DENSE_IMPLS", "LAYER_OPS", "apply_layer",
-    "register_conv_impl", "register_dense_impl", "register_layer_op",
+    "DEFAULT_PASSES", "DispatchStats", "FusedGroup", "GraphProgram",
+    "canonicalize", "eliminate_dead_layers", "execute_graph",
+    "fuse_conv_epilogues", "fuse_pointwise_chains", "lower_network",
+    "CONV_IMPL_REGISTRY", "DENSE_IMPLS", "EPILOGUE_IMPLS", "LAYER_OPS",
+    "apply_group", "apply_layer", "register_conv_impl", "register_dense_impl",
+    "register_epilogue_impl", "register_layer_op",
     "ModeSelectionReport", "refine_plan", "select_modes",
     "Layer", "NetworkDescription", "collect_activations", "run_network",
     "Parallelism", "conv2d", "conv2d_planned", "conv_flp", "conv_klp",
-    "conv_olp",
+    "conv_olp", "conv_policy",
     "DEFAULT_LAYER_PLAN", "IMPL_DEFAULT", "IMPL_PALLAS", "IMPL_SEQUENTIAL",
-    "IMPL_XLA", "ExecutionPlan", "IterationRecord", "LayerPlan",
+    "IMPL_XLA", "ExecutionPlan", "GroupPlan", "IterationRecord", "LayerPlan",
     "SynthesisReport", "ValidationRecord",
     "PlannerConfig", "autotune_plan", "plan_network", "trace_shapes",
     "MODES_FASTEST_FIRST", "ComputeMode", "QuantizedTensor", "mode_dot",

@@ -22,6 +22,19 @@ Registration::
     @register_conv_impl("pallas_mapmajor")
     def _conv(layer, plan, params, x): ...
 
+Fused dispatch (DESIGN.md §9): :func:`apply_group` is the group-level
+twin of :func:`apply_layer` — one call per
+:class:`~repro.core.graph.FusedGroup`.  An implementation that can fold a
+group's epilogue into its own launch (the in-kernel bias+ReLU path)
+registers a *fused-epilogue hook*::
+
+    @register_epilogue_impl("conv", "pallas_mapmajor")
+    def _conv_fused(layer, plan, params, x, epilogue): ...
+
+``apply_group`` prefers the hook; without one it runs the anchor through
+its registry implementation and folds the epilogue members in place —
+still one executor dispatch per group either way.
+
 Implementations registered lazily: looking up an unknown conv/dense impl
 first imports the kernel modules (which self-register), then retries, so
 importing ``repro.core`` never drags in Pallas.  See DESIGN.md §3.
@@ -29,13 +42,13 @@ importing ``repro.core`` never drags in Pallas.  See DESIGN.md §3.
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from .parallelism import conv2d_planned, conv_sequential
+from .parallelism import conv_policy, conv_sequential
 from .plan import IMPL_SEQUENTIAL, IMPL_XLA, LayerPlan
 from .precision import mode_dot
 
@@ -44,6 +57,10 @@ LayerOp = Callable[..., jnp.ndarray]
 LAYER_OPS: Dict[str, LayerOp] = {}
 CONV_IMPLS: Dict[str, LayerOp] = {}
 DENSE_IMPLS: Dict[str, LayerOp] = {}
+#: (anchor kind, impl name) -> fn(layer, plan, params, x, epilogue):
+#: implementations that fold a kernel-fusible epilogue (bias+ReLU) into
+#: the anchor's own launch.
+EPILOGUE_IMPLS: Dict[Tuple[str, str], LayerOp] = {}
 
 # Modules whose import registers additional conv/dense implementations.
 _KERNEL_MODULES = ("repro.kernels.conv_mapmajor.ops",
@@ -69,6 +86,14 @@ def register_conv_impl(name: str):
 def register_dense_impl(name: str):
     def deco(fn: LayerOp) -> LayerOp:
         DENSE_IMPLS[name] = fn
+        return fn
+    return deco
+
+
+def register_epilogue_impl(kind: str, name: str):
+    """Register a fused-epilogue implementation for (anchor kind, impl)."""
+    def deco(fn: LayerOp) -> LayerOp:
+        EPILOGUE_IMPLS[(kind, name)] = fn
         return fn
     return deco
 
@@ -101,8 +126,37 @@ def layer_op(kind: str) -> LayerOp:
 
 def apply_layer(layer, plan: LayerPlan, params: Optional[dict],
                 ins: List[jnp.ndarray]) -> jnp.ndarray:
-    """Evaluate one layer under its plan — the executor's only entry point."""
+    """Evaluate one layer under its plan — the layer-walk entry point."""
     return layer_op(layer.kind)(layer, plan, params, ins)
+
+
+def apply_group(group, gplan, params: dict,
+                ins: List[jnp.ndarray]) -> jnp.ndarray:
+    """Evaluate one fused group under its :class:`~repro.core.plan.GroupPlan`
+    — the graph executor's only entry point (one dispatch per group).
+
+    A kernel-fusible epilogue (bias+ReLU) goes through the registered
+    fused-epilogue hook when the chosen implementation has one — a single
+    launch computes conv+bias+ReLU.  Otherwise the anchor runs through its
+    ordinary registry implementation and the epilogue members are folded in
+    place, op by op, within this one dispatch.
+    """
+    anchor = group.anchor
+    plan = gplan.plan
+    if group.kernel_fusible_epilogue:
+        hook = EPILOGUE_IMPLS.get((anchor.kind, plan.impl))
+        if hook is None:
+            # Lazy kernel self-registration, mirroring _lookup.
+            for mod in _KERNEL_MODULES:
+                importlib.import_module(mod)
+            hook = EPILOGUE_IMPLS.get((anchor.kind, plan.impl))
+        if hook is not None:
+            return hook(anchor, plan, params.get(anchor.name), ins[0],
+                        group.epilogue)
+    y = apply_layer(anchor, plan, params.get(anchor.name), ins)
+    for member in group.epilogue:
+        y = apply_layer(member, plan, params.get(member.name), [y])
+    return y
 
 
 # ---------------------------------------------------------------------------
@@ -128,9 +182,26 @@ def add_bias(y: jnp.ndarray, layer, params) -> jnp.ndarray:
 
 @register_conv_impl(IMPL_XLA)
 def _conv_xla(layer, plan, params, x):
-    y = conv2d_planned(x, params["w"], plan, stride=layer.stride,
-                       padding=layer.padding)
+    y = conv_policy(x, params["w"], stride=layer.stride,
+                    padding=layer.padding, mode=plan.mode,
+                    parallelism=plan.parallelism)
     return add_bias(y, layer, params)
+
+
+@register_epilogue_impl("conv", IMPL_XLA)
+def _conv_xla_fused(layer, plan, params, x, epilogue):
+    """conv+bias+ReLU in one dispatch; XLA fuses the epilogue in-register."""
+    y = add_bias(conv_policy(x, params["w"], stride=layer.stride,
+                             padding=layer.padding, mode=plan.mode,
+                             parallelism=plan.parallelism), layer, params)
+    return jnp.maximum(y, 0)
+
+
+@register_epilogue_impl("dense", IMPL_XLA)
+def _dense_xla_fused(layer, plan, params, x, epilogue):
+    y = add_bias(mode_dot(x.reshape(x.shape[0], -1), params["w"], plan.mode),
+                 layer, params)
+    return jnp.maximum(y, 0)
 
 
 @register_conv_impl(IMPL_SEQUENTIAL)

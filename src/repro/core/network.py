@@ -150,6 +150,19 @@ def _resolve_plan(net: NetworkDescription, plan, modes, parallelism,
 
 
 def _execute(net: NetworkDescription, params, x, plan) -> Dict[str, jnp.ndarray]:
+    """Dispatch the network under its plan.
+
+    A plan carrying a :class:`~repro.core.graph.GraphProgram` executes
+    group by group (one dispatch per fused group; fused intermediates are
+    never materialized); otherwise the historical layer walk runs.  Both
+    paths return the materialized activations keyed by activation name —
+    for the graph path that is every *group output*, which covers every
+    activation any group (and therefore any parametric layer) consumes.
+    """
+    if plan.graph is not None:
+        from .graph import execute_graph
+        return execute_graph(plan.graph, plan, params, x)
+
     from .layer_ops import apply_layer
 
     acts: Dict[str, jnp.ndarray] = {"input": x}
@@ -187,7 +200,11 @@ def collect_activations(net: NetworkDescription, params, x: jnp.ndarray, *,
                         plan=None,
                         modes: Optional[Dict[str, ComputeMode]] = None
                         ) -> Dict[str, jnp.ndarray]:
-    """Run the planned executor keeping every intermediate activation —
-    used by the planner's measured autotune pass and by debugging tools."""
+    """Run the planned executor keeping every *materialized* intermediate
+    activation — used by the planner's measured autotune pass and by
+    debugging tools.  Under a graph-carrying plan the fused-away
+    intermediates do not exist; what remains (every group output) is
+    exactly the set any group input — hence any parametric layer's input —
+    refers to."""
     eff = _resolve_plan(net, plan, modes or {}, None, None, None)
     return _execute(net, params, x, eff)

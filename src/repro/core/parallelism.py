@@ -24,7 +24,8 @@ a scalar), and the intra-thread vector unit is the MXU; see DESIGN.md §2.
 from __future__ import annotations
 
 import enum
-from functools import partial
+import warnings
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -172,15 +173,49 @@ CONV_IMPLS = {Parallelism.OLP: conv_olp, Parallelism.FLP: conv_flp,
               Parallelism.KLP: conv_klp}
 
 
+def conv_policy(x, w, *, stride=1, padding="VALID",
+                mode=ComputeMode.PRECISE,
+                parallelism: Parallelism = Parallelism.OLP):
+    """Convolution under a chosen workload-allocation policy and mode — the
+    policy-dispatch core shared by the XLA registry implementation and the
+    KLP/FLP baseline benchmarks."""
+    return CONV_IMPLS[parallelism](x, w, stride=stride, padding=padding,
+                                   mode=mode)
+
+
 def conv2d(x, w, *, stride=1, padding="VALID", mode=ComputeMode.PRECISE,
-           parallelism: Parallelism = Parallelism.OLP):
-    """Convolution under a chosen workload-allocation policy and mode."""
-    return CONV_IMPLS[parallelism](x, w, stride=stride, padding=padding, mode=mode)
+           parallelism: Optional[Parallelism] = None):
+    """Deprecated flag-style entry point.
+
+    ``parallelism=`` belongs on a :class:`~repro.core.plan.LayerPlan`
+    (``conv2d_planned``) or, for policy baselines, :func:`conv_policy`;
+    passing it here keeps the historical behaviour but warns.
+    """
+    if parallelism is not None:
+        warnings.warn(
+            "conv2d(parallelism=...) is deprecated; build a LayerPlan and "
+            "call conv2d_planned, or use conv_policy for policy baselines",
+            DeprecationWarning, stacklevel=2)
+    return conv_policy(x, w, stride=stride, padding=padding, mode=mode,
+                       parallelism=parallelism or Parallelism.OLP)
 
 
 def conv2d_planned(x, w, plan, *, stride=1, padding="VALID"):
-    """Convolution under a :class:`~repro.core.plan.LayerPlan`: the plan
-    carries both the thread policy and the compute mode, so call sites no
-    longer thread two loose flags."""
-    return conv2d(x, w, stride=stride, padding=padding, mode=plan.mode,
-                  parallelism=plan.parallelism)
+    """Convolution under a :class:`~repro.core.plan.LayerPlan`.
+
+    Routes through the same implementation registry the group executor
+    uses, so the plan's ``impl`` is honored — a plan routed to the
+    map-major Pallas kernel (or the sequential baseline) executes that
+    implementation here too, not just its ``parallelism``+``mode``
+    projection.  ``IMPL_DEFAULT`` (a structural plan on a conv) lowers to
+    the canonical XLA policy implementation.
+    """
+    from .layer_ops import conv_impl
+    from .network import Layer
+    from .plan import IMPL_DEFAULT, IMPL_XLA
+
+    impl = IMPL_XLA if plan.impl == IMPL_DEFAULT else plan.impl
+    layer = Layer(name="<conv2d_planned>", kind="conv",
+                  out_channels=w.shape[0], kernel=w.shape[2], stride=stride,
+                  padding=padding, use_bias=False)
+    return conv_impl(impl)(layer, plan, {"w": w}, x)

@@ -32,6 +32,7 @@ from .parallelism import Parallelism
 from .precision import ComputeMode
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .graph import FusedGroup, GraphProgram
     from .network import NetworkDescription
 
 # Implementation registry keys (see layer_ops.py for the registries).
@@ -84,6 +85,34 @@ class LayerPlan:
 DEFAULT_LAYER_PLAN = LayerPlan()
 
 
+@dataclass(frozen=True)
+class GroupPlan:
+    """How one :class:`~repro.core.graph.FusedGroup` executes.
+
+    The execution choice (impl / thread policy / mode / ``u``) is the
+    anchor layer's :class:`LayerPlan`; ``members`` records the fused
+    (name, kind) signature so the plan of a fused group can never be
+    mistaken for the anchor layer's standalone plan — ``cache_key``
+    covers both, mirroring how ``ExecutionPlan.fingerprint`` covers the
+    graph's fusion digest.
+    """
+    name: str
+    members: Tuple[Tuple[str, str], ...]
+    plan: LayerPlan
+
+    @property
+    def fused(self) -> bool:
+        return len(self.members) > 1
+
+    @property
+    def cache_key(self) -> Tuple:
+        return (self.members, self.plan.cache_key)
+
+    def describe(self) -> str:
+        fused = "+".join(n for n, _ in self.members)
+        return f"{fused}: {self.plan.describe()}"
+
+
 @dataclass
 class ExecutionPlan:
     """Per-layer plans for one network — Stage A's output artifact."""
@@ -96,9 +125,20 @@ class ExecutionPlan:
     #: happen to coincide today (they would silently diverge on the next
     #: re-plan, and cached executables embed device-tuned routing).
     profile: DeviceProfile = DEFAULT_PROFILE
+    #: The fused-group program this plan dispatches through, or None for
+    #: the legacy layer-by-layer walk.  Part of :meth:`fingerprint` (via
+    #: the fusion digest): a fused and an unfused plan share identical
+    #: per-layer entries — only the grouping differs — and they compile
+    #: different programs, so they must never alias in the ProgramCache.
+    graph: "Optional[GraphProgram]" = None
 
     def for_layer(self, name: str) -> LayerPlan:
         return self.layers.get(name, DEFAULT_LAYER_PLAN)
+
+    def for_group(self, group: "FusedGroup") -> GroupPlan:
+        """The group's plan: the anchor layer's choice + the fused signature."""
+        return GroupPlan(name=group.name, members=group.signature(),
+                         plan=self.for_layer(group.name))
 
     def __iter__(self) -> Iterator[Tuple[str, LayerPlan]]:
         return iter(self.layers.items())
@@ -112,13 +152,20 @@ class ExecutionPlan:
         for name, mode in modes.items():
             new[name] = new.get(name, DEFAULT_LAYER_PLAN).with_mode(mode)
         return ExecutionPlan(self.net_name, new, origin=self.origin,
-                             profile=self.profile)
+                             profile=self.profile, graph=self.graph)
 
     def with_layer(self, name: str, plan: LayerPlan) -> "ExecutionPlan":
         new = dict(self.layers)
         new[name] = plan
         return ExecutionPlan(self.net_name, new, origin=self.origin,
-                             profile=self.profile)
+                             profile=self.profile, graph=self.graph)
+
+    def with_graph(self, graph: "Optional[GraphProgram]") -> "ExecutionPlan":
+        """The same per-layer choices dispatched through ``graph`` (or the
+        layer walk when None) — what the fusion parity tests diff."""
+        return ExecutionPlan(self.net_name, dict(self.layers),
+                             origin=self.origin, profile=self.profile,
+                             graph=graph)
 
     @property
     def modes(self) -> Dict[str, ComputeMode]:
@@ -137,8 +184,11 @@ class ExecutionPlan:
         dispatch share a fingerprint (and therefore share ProgramCache
         entries — see serving/program_cache.py).  The device profile *is*
         included: the ProgramCache must never serve a plan synthesized for
-        a different device.  Layer order does not matter: entries are
-        hashed sorted by name.
+        a different device.  So is the graph's fusion digest (when the plan
+        dispatches through a :class:`~repro.core.graph.GraphProgram`): a
+        fused and an unfused plan carry identical per-layer entries but
+        compile different programs.  Layer order does not matter: entries
+        are hashed sorted by name.
         """
         h = hashlib.sha256()
         h.update(self.net_name.encode())
@@ -146,6 +196,8 @@ class ExecutionPlan:
         for name in sorted(self.layers):
             impl, par, mode, u, vb = self.layers[name].cache_key
             h.update(f"|{name}={impl},{par},{mode},{u},vb{vb}".encode())
+        if self.graph is not None:
+            h.update(f"!fusion={self.graph.fusion_digest()}".encode())
         return h.hexdigest()[:16]
 
     # -- reporting ----------------------------------------------------------

@@ -34,8 +34,10 @@ See DESIGN.md §3 for how plans flow through the synthesizer and executor.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -47,14 +49,31 @@ from .parallelism import Parallelism
 from .plan import (IMPL_PALLAS, IMPL_XLA, ExecutionPlan, LayerPlan)
 from .precision import ComputeMode
 
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .graph import GraphProgram
+
 #: Deprecated aliases for the historical hard-coded TPU v5e roofline
 #: constants.  The numbers now live in :data:`repro.device.TPU_V5E` (the
 #: default profile); per-device planning reads ``PlannerConfig.profile``
-#: instead.  Kept so legacy imports keep resolving — do not add new uses.
-PEAK_FLOPS = DEFAULT_PROFILE.peak_flops_bf16     # deprecated: use profile
-HBM_BW = DEFAULT_PROFILE.hbm_bandwidth           # deprecated: use profile
-#: FLOPs/byte at which compute time equals memory time (deprecated alias).
-RIDGE = DEFAULT_PROFILE.ridge("bf16")
+#: instead.  Resolved through ``__getattr__`` below so every remaining use
+#: warns — do not add new ones.
+_DEPRECATED_CONSTANTS = {
+    "PEAK_FLOPS": lambda: DEFAULT_PROFILE.peak_flops_bf16,
+    "HBM_BW": lambda: DEFAULT_PROFILE.hbm_bandwidth,
+    # FLOPs/byte at which compute time equals memory time.
+    "RIDGE": lambda: DEFAULT_PROFILE.ridge("bf16"),
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED_CONSTANTS:
+        warnings.warn(
+            f"repro.core.planner.{name} is a deprecated alias; read the "
+            f"target DeviceProfile (e.g. PlannerConfig.profile or "
+            f"repro.device.DEFAULT_PROFILE) instead",
+            DeprecationWarning, stacklevel=2)
+        return _DEPRECATED_CONSTANTS[name]()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclass(frozen=True)
@@ -196,16 +215,34 @@ def _choose_u(cin: int, cout: int, cfg: PlannerConfig) -> int:
     return max(cfg.u_min, _pow2_at_least(widest))
 
 
+def fused_cost(cost: LayerCost, out_elements: float,
+               epilogue_ops: int) -> LayerCost:
+    """The cost of a fused group: the anchor's cost plus the epilogue's
+    FLOPs, with *no* added bytes — the epilogue runs in-register on the
+    accumulator, which is exactly why fusion raises arithmetic intensity
+    (the intermediate's HBM round-trip disappears from the group)."""
+    if epilogue_ops <= 0:
+        return cost
+    return LayerCost(cost.flops + epilogue_ops * out_elements, cost.bytes,
+                     cost.profile)
+
+
 def _plan_conv(layer: Layer, cin: int, h: int, w: int,
-               cfg: PlannerConfig, mode: ComputeMode) -> LayerPlan:
+               cfg: PlannerConfig, mode: ComputeMode,
+               epilogue_ops: int = 0) -> LayerPlan:
     cost = conv_cost(cin, h, w, layer, cfg.batch, profile=cfg.profile)
+    ho = _spatial_out(h, layer.kernel, layer.stride, layer.padding)
+    wo = _spatial_out(w, layer.kernel, layer.stride, layer.padding)
+    cost = fused_cost(cost, cfg.batch * layer.out_channels * ho * wo,
+                      epilogue_ops)
     u = _choose_u(cin, layer.out_channels, cfg)
     ai = cost.arithmetic_intensity
     ridge = cfg.profile.ridge("bf16")
+    fused_note = f" [fused+{epilogue_ops} epilogue]" if epilogue_ops else ""
 
     def mk(impl: str, reason: str) -> LayerPlan:
         return LayerPlan(impl=impl, parallelism=Parallelism.OLP, mode=mode,
-                         u=u, reason=reason,
+                         u=u, reason=reason + fused_note,
                          vmem_budget=cfg.profile.vmem_budget)
 
     from ..kernels.conv_mapmajor.ops import fits_vmem
@@ -237,14 +274,16 @@ def _plan_conv(layer: Layer, cin: int, h: int, w: int,
 
 
 def _plan_dense(layer: Layer, in_features: int, cfg: PlannerConfig,
-                mode: ComputeMode) -> LayerPlan:
+                mode: ComputeMode, epilogue_ops: int = 0) -> LayerPlan:
     cost = dense_cost(in_features, layer.out_channels, cfg.batch,
                       profile=cfg.profile)
+    cost = fused_cost(cost, cfg.batch * layer.out_channels, epilogue_ops)
     u = _choose_u(in_features, layer.out_channels, cfg)
+    fused_note = f" [fused+{epilogue_ops} epilogue]" if epilogue_ops else ""
 
     def mk(impl: str, reason: str) -> LayerPlan:
         return LayerPlan(impl=impl, parallelism=Parallelism.OLP, mode=mode,
-                         u=u, reason=reason,
+                         u=u, reason=reason + fused_note,
                          vmem_budget=cfg.profile.vmem_budget)
 
     if (mode is not ComputeMode.PRECISE and cfg.pallas_enabled
@@ -264,27 +303,41 @@ def _plan_dense(layer: Layer, in_features: int, cfg: PlannerConfig,
 
 def plan_network(net: NetworkDescription, *,
                  modes: Optional[Dict[str, ComputeMode]] = None,
-                 config: Optional[PlannerConfig] = None) -> ExecutionPlan:
-    """Assign a :class:`LayerPlan` to every layer via the static cost model."""
+                 config: Optional[PlannerConfig] = None,
+                 graph: "Optional[GraphProgram]" = None) -> ExecutionPlan:
+    """Assign a :class:`LayerPlan` to every layer via the static cost model.
+
+    With ``graph=`` (a lowered :class:`~repro.core.graph.GraphProgram`)
+    the rule-3 roofline decision for each conv/dense anchor is taken on
+    the *fused* FLOP/byte ratio — the epilogue's FLOPs at zero added bytes
+    — and the returned plan dispatches through the graph (one op per
+    group; the plan fingerprint covers the fusion digest).
+    """
     cfg = config or PlannerConfig()
     modes = modes or {}
     shapes = trace_shapes(net)
+    epilogue_ops: Dict[str, int] = {}
+    if graph is not None:
+        epilogue_ops = {g.name: len(g.epilogue) for g in graph.groups
+                        if g.fused and g.anchor.kind in ("conv", "dense")}
     layers: Dict[str, LayerPlan] = {}
     for l in net.layers:
         mode = modes.get(l.name, ComputeMode.PRECISE)
         if l.kind == "conv":
             cin, h, w = shapes[l.inputs[0]]
-            layers[l.name] = _plan_conv(l, cin, h, w, cfg, mode)
+            layers[l.name] = _plan_conv(l, cin, h, w, cfg, mode,
+                                        epilogue_ops.get(l.name, 0))
         elif l.kind == "dense":
             in_shape = shapes[l.inputs[0]]
             in_features = 1
             for d in in_shape:
                 in_features *= d
-            layers[l.name] = _plan_dense(l, in_features, cfg, mode)
+            layers[l.name] = _plan_dense(l, in_features, cfg, mode,
+                                         epilogue_ops.get(l.name, 0))
         else:
             layers[l.name] = LayerPlan(mode=mode, reason="structural")
     return ExecutionPlan(net.name, layers, origin="planner",
-                         profile=cfg.profile)
+                         profile=cfg.profile, graph=graph)
 
 
 # ---------------------------------------------------------------------------
@@ -321,11 +374,19 @@ def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
     * the Pallas candidate for PRECISE-mode layers (the joint invariant:
       the vector-MAC kernel is inexact-only; timing it under PRECISE would
       let a measurement contradict ``mode_selector.refine_plan``).
+
+    Under a graph-carrying plan, candidates are timed on the *fused group*
+    (``apply_group`` with the anchor's candidate plan, epilogue included)
+    — the unit the executor actually dispatches — so a kernel with an
+    in-kernel epilogue is credited for the dispatch it saves.
     """
     from ..kernels.conv_mapmajor.ops import fits_vmem
-    from .layer_ops import apply_layer
+    from .layer_ops import apply_group, apply_layer
     from .network import collect_activations
+    from .plan import GroupPlan
 
+    groups = {g.name: g for g in plan.graph.groups} \
+        if plan.graph is not None else {}
     acts = collect_activations(net, params, x, plan=plan)
     tuned = dict(plan.layers)
     for l in net.layers:
@@ -342,13 +403,20 @@ def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
                              base.u, base.mode,
                              budget=plan.profile.vmem_budget):
                 layer_candidates.remove(IMPL_PALLAS)
+        group = groups.get(l.name)
         timings: List[Tuple[float, str]] = []
         for impl in layer_candidates:
             cand = LayerPlan(impl=impl, parallelism=base.parallelism,
                              mode=base.mode, u=base.u,
                              vmem_budget=base.vmem_budget)
-            run = jax.jit(lambda a, l=l, cand=cand: apply_layer(
-                l, cand, params.get(l.name), [a]))
+            if group is not None:
+                gp = GroupPlan(name=group.name, members=group.signature(),
+                               plan=cand)
+                run = jax.jit(lambda a, g=group, gp=gp: apply_group(
+                    g, gp, params, [a]))
+            else:
+                run = jax.jit(lambda a, l=l, cand=cand: apply_layer(
+                    l, cand, params.get(l.name), [a]))
             try:
                 timings.append((_time_fn(lambda: run(x_in), reps), impl))
             except Exception:      # candidate can't run this shape; skip it
@@ -362,4 +430,4 @@ def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
             reason=f"autotune: {t_best * 1e6:.0f}us best of "
                    f"{len(timings)}")
     return ExecutionPlan(net.name, tuned, origin="autotune",
-                         profile=plan.profile)
+                         profile=plan.profile, graph=plan.graph)

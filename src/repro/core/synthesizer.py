@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..device import DeviceProfile, resolve_profile
+from .graph import lower_network
 from .layout import LANES, weights_to_map_major
 from .mode_selector import ModeSelectionReport, refine_plan
 from .network import NetworkDescription, run_network
@@ -185,6 +186,10 @@ class SynthesizedProgram:
                  f" ({len(self.net.param_layers)} parametric)",
                  f"plan origin      : {self.plan.origin}",
                  f"synthesis time   : {self.synthesis_seconds:.2f}s",
+                 f"dispatch         : "
+                 + (f"fused graph ({len(self.plan.graph.groups)} groups / "
+                    f"{self.plan.graph.n_layers} layers)"
+                    if self.plan.graph is not None else "layer walk"),
                  "execution plan:",
                  "  " + self.plan.table().replace("\n", "\n  "),
                  "layer modes:"]
@@ -198,6 +203,9 @@ class SynthesizedProgram:
             lines.append("fixed-point synthesis:")
             lines.append("  " + self.synthesis_report.summary()
                          .replace("\n", "\n  "))
+        if self.plan.graph is not None:
+            lines.append("fusion:")
+            lines.append("  " + self.plan.graph.report().replace("\n", "\n  "))
         return "\n".join(lines)
 
 
@@ -243,10 +251,13 @@ def _replan(net: NetworkDescription, base: ExecutionPlan,
     so a plan drawn at the PRECISE default would mis-route bf16-feasible
     layers.  Measured (autotune) and user/uniform plans keep their impls;
     only modes overlay, with the PRECISE->XLA invariant re-applied
-    (:func:`~repro.core.plan.enforce_precise_xla`).
+    (:func:`~repro.core.plan.enforce_precise_xla`).  The base plan's graph
+    (fused dispatch) is sticky through both paths: re-planning never
+    silently changes how the program is grouped.
     """
     if base.origin == "planner":
-        return plan_network(net, modes=modes, config=planner_config)
+        return plan_network(net, modes=modes, config=planner_config,
+                            graph=base.graph)
     overlaid, _ = enforce_precise_xla(base.with_modes(modes))
     return overlaid
 
@@ -302,7 +313,8 @@ def synthesize(net: NetworkDescription,
                max_iterations: int = MAX_SYNTHESIS_ITERATIONS,
                parallelism: Optional[Parallelism] = None,
                backend: Optional[str] = None,
-               forced_mode: Optional[ComputeMode] = None) -> SynthesizedProgram:
+               forced_mode: Optional[ComputeMode] = None,
+               fuse: bool = True) -> SynthesizedProgram:
     """Run the full Cappuccino pipeline and return the synthesized program.
 
     Stage A emits an :class:`ExecutionPlan`: pass ``plan=`` to supply one,
@@ -322,6 +334,19 @@ def synthesize(net: NetworkDescription,
     the budget holds.  The returned program's measured degradation on the
     calibration set therefore never exceeds ``max_degradation``; the audit
     trail is ``program.synthesis_report``.
+
+    ``fuse=True`` (the default) first lowers the network through the graph
+    pass pipeline (``core/graph.py``: canonicalize, dead-layer
+    elimination, conv/dense+bias+ReLU epilogue fusion, pointwise-chain
+    fusion) and plans/dispatches *fused groups*: the planner costs each
+    group's fused FLOP/byte ratio, Stage-C probes and the validation gate
+    measure the fused dispatch path, and the emitted program executes one
+    op per group (one Pallas launch for a fused conv group).  Modes remain
+    keyed by anchor layer name — every inexactable layer is a group
+    anchor, so Stage C's per-layer search *is* the per-group search.  A
+    supplied ``plan=`` keeps its own grouping (its ``graph`` field);
+    ``fuse=False`` and the deprecated ``backend=`` shim keep the
+    historical layer walk.
 
     ``forced_mode`` skips stage C (and the gate — the caller is pinning
     modes deliberately, e.g. to reproduce the paper's 'Parallel' and
@@ -358,6 +383,10 @@ def synthesize(net: NetworkDescription,
             "profile=plan.profile)) or re-plan for the target")
 
     # Stage A: primary program synthesis -> ExecutionPlan artifact.
+    # Graph lowering happens first (fuse=True): the pass pipeline decides
+    # the dispatch groups, then every planning/probing/validation step
+    # below operates on the fused program.  A supplied plan= keeps its own
+    # grouping; the deprecated backend= shim keeps the legacy layer walk.
     if plan is None:
         if backend is not None or parallelism is not None:
             warnings.warn(
@@ -370,7 +399,8 @@ def synthesize(net: NetworkDescription,
                 profile=(planner_config.profile if planner_config is not None
                          else PlannerConfig().profile))
         else:
-            plan = plan_network(net, config=planner_config)
+            graph = lower_network(net) if fuse else None
+            plan = plan_network(net, config=planner_config, graph=graph)
     tune_x = None
     if autotune:
         tune_x = autotune_input if autotune_input is not None else \

@@ -39,16 +39,27 @@ from jax.experimental.pallas import tpu as pltpu
 from ...core.precision import ComputeMode
 
 
-def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int,
+def _conv_kernel(x_ref, w_ref, *refs, kh: int, kw: int,
                  stride: int, h_out: int, w_out: int, n_gi: int,
-                 out_dtype, acc_dtype):
+                 out_dtype, acc_dtype, has_bias: bool, apply_relu: bool):
     """One grid cell: accumulate one input-channel group into the output tile.
 
     x_ref: (1, 1, H_pad, W_pad, u_in)   one batch elem, one input group
     w_ref: (1, u_out, 1, kh, kw, u_in)  weights for this (go, gi) pair
+    b_ref: (1, u_out)                   optional bias block (has_bias)
     o_ref: (1, 1, h_out, w_out, u_out)  revisited across the gi grid dim
     acc_ref: VMEM scratch (h_out * w_out, u_out) in acc_dtype
+
+    The fused epilogue (§IV-B meets Motamedi et al.'s folded post-conv
+    computation) runs at flush time on the VMEM accumulator: bias add and
+    ReLU happen in-register in ``acc_dtype`` before the single output
+    write, so a conv+bias+ReLU group is one launch with zero extra HBM
+    traffic.
     """
+    if has_bias:
+        b_ref, o_ref, acc_ref = refs
+    else:
+        o_ref, acc_ref = refs
     gi = pl.program_id(2)
 
     @pl.when(gi == 0)
@@ -76,19 +87,31 @@ def _conv_kernel(x_ref, w_ref, o_ref, acc_ref, *, kh: int, kw: int,
 
     @pl.when(gi == n_gi - 1)
     def _flush():
-        o_ref[0, 0] = acc_ref[...].reshape(h_out, w_out, u_out).astype(out_dtype)
+        out = acc_ref[...]                          # (h_out*w_out, u_out)
+        if has_bias:
+            out = out + b_ref[...].astype(acc_dtype)
+        if apply_relu:
+            out = jnp.maximum(out, 0)
+        o_ref[0, 0] = out.reshape(h_out, w_out, u_out).astype(out_dtype)
 
 
-def conv_mapmajor(x_mm: jnp.ndarray, w_mm: jnp.ndarray, *, stride: int = 1,
+def conv_mapmajor(x_mm: jnp.ndarray, w_mm: jnp.ndarray,
+                  b_mm: jnp.ndarray = None, *, stride: int = 1,
                   out_hw=None,
                   mode: ComputeMode = ComputeMode.RELAXED,
+                  apply_relu: bool = False,
                   interpret: bool = True) -> jnp.ndarray:
-    """Map-major OLP convolution.
+    """Map-major OLP convolution with an optional fused bias+ReLU epilogue.
 
     x_mm: (N, Gi, H_pad, W_pad, u)   map-major, already padded for SAME
     w_mm: (Go, u_out, Gi, Kh, Kw, u) map-major weights (synthesis-time order)
+    b_mm: (Go, u_out) optional bias, group-blocked like the output channels
     returns (N, Go, Ho, Wo, u) map-major — directly consumable by the next
     layer (the zero-overhead reorder).
+
+    ``b_mm``/``apply_relu`` fold the post-conv computation into the MAC
+    launch (applied to the accumulator at flush time), so a fused
+    conv+bias+ReLU group is exactly one Pallas launch.
     """
     n, n_gi, h_pad, w_pad, u = x_mm.shape
     n_go, u_out, n_gi2, kh, kw, u2 = w_mm.shape
@@ -105,21 +128,30 @@ def conv_mapmajor(x_mm: jnp.ndarray, w_mm: jnp.ndarray, *, stride: int = 1,
     operand_dtype = mode.operand_dtype
     acc_dtype = mode.accum_dtype
     out_dtype = mode.out_dtype
+    has_bias = b_mm is not None
 
     kernel = functools.partial(
         _conv_kernel, kh=kh, kw=kw, stride=stride, h_out=h_out, w_out=w_out,
-        n_gi=n_gi, out_dtype=out_dtype, acc_dtype=acc_dtype)
+        n_gi=n_gi, out_dtype=out_dtype, acc_dtype=acc_dtype,
+        has_bias=has_bias, apply_relu=apply_relu)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, h_pad, w_pad, u), lambda b, go, gi: (b, gi, 0, 0, 0)),
+        pl.BlockSpec((1, u_out, 1, kh, kw, u), lambda b, go, gi: (go, 0, gi, 0, 0, 0)),
+    ]
+    operands = [x_mm.astype(operand_dtype), w_mm.astype(operand_dtype)]
+    if has_bias:
+        assert b_mm.shape == (n_go, u_out), (b_mm.shape, (n_go, u_out))
+        in_specs.append(pl.BlockSpec((1, u_out), lambda b, go, gi: (go, 0)))
+        operands.append(b_mm.astype(jnp.float32))
 
     return pl.pallas_call(
         kernel,
         grid=(n, n_go, n_gi),
-        in_specs=[
-            pl.BlockSpec((1, 1, h_pad, w_pad, u), lambda b, go, gi: (b, gi, 0, 0, 0)),
-            pl.BlockSpec((1, u_out, 1, kh, kw, u), lambda b, go, gi: (go, 0, gi, 0, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, h_out, w_out, u_out),
                                lambda b, go, gi: (b, go, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, n_go, h_out, w_out, u_out), out_dtype),
         scratch_shapes=[pltpu.VMEM((h_out * w_out, u_out), acc_dtype)],
         interpret=interpret,
-    )(x_mm.astype(operand_dtype), w_mm.astype(operand_dtype))
+    )(*operands)

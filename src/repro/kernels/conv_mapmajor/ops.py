@@ -16,7 +16,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ...core.layer_ops import add_bias, register_conv_impl
+from ...core.layer_ops import (add_bias, register_conv_impl,
+                               register_epilogue_impl)
 from ...core.layout import LANES, from_map_major, to_map_major
 from ...core.plan import IMPL_PALLAS
 from ...core.precision import ComputeMode, resolve_weight
@@ -47,12 +48,23 @@ def _pad_amounts(h, k, s, padding):
     return out, before, after + halo
 
 
+def _pack_bias(b: jnp.ndarray, cout: int, u: int) -> jnp.ndarray:
+    """Bias (Cout,) -> group-blocked (Go, u), lane-padded like pack_weights."""
+    n_go = -(-cout // u)
+    pad = n_go * u - cout
+    bf = b.astype(jnp.float32)
+    if pad:
+        bf = jnp.pad(bf, (0, pad))
+    return bf.reshape(n_go, u)
+
+
 @functools.partial(jax.jit, static_argnames=("stride", "padding", "mode", "u",
-                                             "interpret"))
+                                             "interpret", "fuse_bias_relu"))
 def _conv2d_mapmajor_pallas(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
                             stride: int = 1, padding: str = "SAME",
                             mode: ComputeMode = ComputeMode.RELAXED,
-                            u: int = LANES, interpret: bool = True) -> jnp.ndarray:
+                            u: int = LANES, interpret: bool = True,
+                            fuse_bias_relu: bool = False) -> jnp.ndarray:
     n, cin, h, wdim = x.shape
     cout, _, kh, kw = w.shape
     h_out, ph0, ph1 = _pad_amounts(h, kh, stride, padding)
@@ -61,6 +73,15 @@ def _conv2d_mapmajor_pallas(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
 
     x_mm = to_map_major(xp, u, channel_axis=1)
     w_mm = pack_weights(w, u)
+
+    if fuse_bias_relu:
+        # In-kernel epilogue: bias + ReLU on the VMEM accumulator, one
+        # launch total (DESIGN.md §9).
+        b_mm = _pack_bias(b, cout, u) if b is not None else None
+        out_mm = conv_mapmajor(x_mm, w_mm, b_mm, stride=stride,
+                               out_hw=(h_out, w_out), mode=mode,
+                               apply_relu=True, interpret=interpret)
+        return from_map_major(out_mm, cout, channel_axis=1)
 
     out_mm = conv_mapmajor(x_mm, w_mm, stride=stride, out_hw=(h_out, w_out),
                            mode=mode, interpret=interpret)
@@ -74,10 +95,14 @@ def conv2d_mapmajor(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
                     stride: int = 1, padding: str = "SAME",
                     mode: ComputeMode = ComputeMode.RELAXED,
                     u: int = LANES, interpret: bool = True,
-                    vmem_budget: Optional[int] = None) -> jnp.ndarray:
+                    vmem_budget: Optional[int] = None,
+                    fuse_bias_relu: bool = False) -> jnp.ndarray:
     """NCHW in, NCHW out; map-major + Pallas OLP inside.
 
     x: (N, Cin, H, W); w: (Cout, Cin, Kh, Kw); optional bias (Cout,).
+    ``fuse_bias_relu=True`` folds bias and ReLU into the kernel's flush
+    (the fused-group epilogue): one Pallas launch computes
+    ``relu(conv(x, w) + b)``.
 
     Enforces the kernel's VMEM envelope: when one channel group's padded
     input plane exceeds ``vmem_budget`` (the target device's block budget;
@@ -92,18 +117,20 @@ def conv2d_mapmajor(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
     if not fits_vmem(h, wdim, kh, stride, padding, u, mode,
                      budget=vmem_budget):
         return _conv2d_xla_fallback(x, w, b, stride=stride, padding=padding,
-                                    mode=mode)
+                                    mode=mode, relu=fuse_bias_relu)
     return _conv2d_mapmajor_pallas(x, w, b, stride=stride, padding=padding,
-                                   mode=mode, u=u, interpret=interpret)
+                                   mode=mode, u=u, interpret=interpret,
+                                   fuse_bias_relu=fuse_bias_relu)
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "padding", "mode"))
-def _conv2d_xla_fallback(x, w, b, *, stride, padding, mode):
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "mode",
+                                             "relu"))
+def _conv2d_xla_fallback(x, w, b, *, stride, padding, mode, relu=False):
     from ...core.parallelism import conv_olp
     out = conv_olp(x, w, stride=stride, padding=padding, mode=mode)
     if b is not None:
         out = out + b[None, :, None, None].astype(out.dtype)
-    return out
+    return jnp.maximum(out, 0) if relu else out
 
 
 def input_block_vmem_bytes(h_pad: int, w_pad: int, u: int,
@@ -140,3 +167,21 @@ def _conv_pallas_planned(layer, plan, params, x):
                            mode=plan.mode, u=plan.u,
                            interpret=jax.default_backend() != "tpu",
                            vmem_budget=plan.vmem_budget)
+
+
+@register_epilogue_impl("conv", IMPL_PALLAS)
+def _conv_pallas_fused(layer, plan, params, x, epilogue):
+    """Fused-epilogue hook: conv+bias+ReLU as one Pallas launch.
+
+    ``epilogue`` is guaranteed kernel-fusible by the graph pass
+    (``KERNEL_EPILOGUE_KINDS``, i.e. ReLU only) — the kernel applies it to
+    the VMEM accumulator at flush time, so the fused group costs no extra
+    HBM round-trip and no extra launch.
+    """
+    w = resolve_weight(params["w"], plan.mode)
+    return conv2d_mapmajor(x, w, params.get("b") if layer.use_bias else None,
+                           stride=layer.stride, padding=layer.padding,
+                           mode=plan.mode, u=plan.u,
+                           interpret=jax.default_backend() != "tpu",
+                           vmem_budget=plan.vmem_budget,
+                           fuse_bias_relu=True)

@@ -33,7 +33,8 @@ def compute_fingerprints() -> dict:
     must never share a fingerprint (the ProgramCache relies on it).
     """
     from repro.cnn import alexnet, googlenet, squeezenet
-    from repro.core import ComputeMode, PlannerConfig, plan_network
+    from repro.core import (ComputeMode, PlannerConfig, lower_network,
+                            plan_network)
     from repro.device import TPU_V4
 
     nets = {
@@ -46,6 +47,7 @@ def compute_fingerprints() -> dict:
     out = {}
     for name, net in nets.items():
         relaxed = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
+        graph = lower_network(net)
         for allow_pallas in (False, True):
             cfg = PlannerConfig(allow_pallas=allow_pallas)
             tag = "pallas" if allow_pallas else "xla_only"
@@ -53,6 +55,11 @@ def compute_fingerprints() -> dict:
                 plan_network(net, config=cfg).fingerprint()
             out[f"{name}.{tag}.all_relaxed"] = \
                 plan_network(net, modes=relaxed, config=cfg).fingerprint()
+            # fused-group cases: the same plan dispatched through the graph
+            # program — must never alias its unfused counterpart.
+            out[f"{name}.{tag}.all_relaxed.fused"] = \
+                plan_network(net, modes=relaxed, config=cfg,
+                             graph=graph).fingerprint()
         v4 = PlannerConfig(profile=TPU_V4, allow_pallas=True)
         out[f"{name}.pallas.tpu_v4.all_relaxed"] = \
             plan_network(net, modes=relaxed, config=v4).fingerprint()

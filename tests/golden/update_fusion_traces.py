@@ -1,0 +1,60 @@
+"""Regenerate tests/golden/fusion_traces.json.
+
+Run after an *intentional* change to the graph-pass pipeline (pass order,
+fusion eligibility rules, trace wording):
+
+    PYTHONPATH=src python tests/golden/update_fusion_traces.py
+
+The golden file pins, for each reference network: the fusion digest, the
+group structure (member layer names per group), and the full pass trace —
+so fusion decisions are reviewable as a diff, exactly like plan
+fingerprints.  The paired test lives in tests/test_graph_fusion.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN_PATH = os.path.join(HERE, "fusion_traces.json")
+sys.path.insert(0, os.path.join(HERE, os.pardir, os.pardir, "src"))
+
+
+def compute_traces() -> dict:
+    from repro.cnn import alexnet, googlenet, squeezenet
+    from repro.core import lower_network
+
+    nets = {
+        "alexnet_s0.1_hw67": alexnet(scale=0.1, num_classes=10, input_hw=67),
+        "squeezenet_s0.08_hw64": squeezenet(scale=0.08, num_classes=10,
+                                            input_hw=64),
+        "googlenet_s0.1_hw64": googlenet(scale=0.1, num_classes=10,
+                                         input_hw=64),
+    }
+    out = {}
+    for name, net in nets.items():
+        graph = lower_network(net)
+        out[name] = {
+            "fusion_digest": graph.fusion_digest(),
+            "groups": [
+                {"name": g.name,
+                 "members": [l.name for l in g.layers],
+                 "inputs": list(g.inputs)}
+                for g in graph.groups],
+            "trace": list(graph.trace),
+        }
+    return out
+
+
+def main():
+    traces = compute_traces()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(traces, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote fusion traces for {len(traces)} network(s) to "
+          f"{GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

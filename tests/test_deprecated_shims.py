@@ -101,3 +101,97 @@ def test_warm_buckets_is_off_the_deprecated_alias(small_net):
         warnings.simplefilter("error", DeprecationWarning)
         warm_buckets(cache, program, max_batch=2)
     assert len(cache) == 2                     # buckets 1 and 2 compiled
+
+
+# --------------------------------------------------------- new in PR 5 ----
+def _deprecation_records(record):
+    return [r for r in record if issubclass(r.category, DeprecationWarning)]
+
+
+def test_conv2d_parallelism_shim_warns_and_matches_conv_policy():
+    """conv2d(parallelism=...) is deprecated: it must warn (pointing at the
+    *caller*, i.e. this file) and keep the historical policy dispatch."""
+    from repro.core import Parallelism, conv2d, conv_policy
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (6, 4, 3, 3)) * 0.1
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        legacy = conv2d(x, w, padding="SAME", parallelism=Parallelism.FLP)
+    dep = _deprecation_records(record)
+    assert dep and "conv2d(parallelism=" in str(dep[0].message)
+    assert dep[0].filename == __file__          # stacklevel points here
+    clean = conv_policy(x, w, padding="SAME", parallelism=Parallelism.FLP)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(clean))
+
+
+def test_conv2d_without_parallelism_is_clean():
+    from repro.core import conv2d
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(1), (6, 4, 3, 3)) * 0.1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        conv2d(x, w, padding="SAME")
+
+
+@pytest.mark.parametrize("name,profile_value", [
+    ("PEAK_FLOPS", lambda p: p.peak_flops_bf16),
+    ("HBM_BW", lambda p: p.hbm_bandwidth),
+    ("RIDGE", lambda p: p.ridge("bf16")),
+])
+def test_planner_constant_aliases_warn_and_read_default_profile(
+        name, profile_value):
+    """planner.PEAK_FLOPS/HBM_BW/RIDGE are deprecated aliases of the
+    default DeviceProfile: access warns at the caller's frame and the
+    value still agrees with the profile."""
+    from repro.core import planner
+    from repro.device import DEFAULT_PROFILE
+
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        value = getattr(planner, name)
+    dep = _deprecation_records(record)
+    assert dep and "deprecated alias" in str(dep[0].message)
+    assert dep[0].filename == __file__          # stacklevel points here
+    assert value == profile_value(DEFAULT_PROFILE)
+
+
+def test_planner_unknown_attribute_still_raises():
+    from repro.core import planner
+
+    with pytest.raises(AttributeError, match="NO_SUCH_CONSTANT"):
+        planner.NO_SUCH_CONSTANT
+
+
+def test_run_network_shim_stacklevel_points_at_caller(small_net):
+    net, params, x = small_net
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        run_network(net, params, x, backend="xla")
+    dep = _deprecation_records(record)
+    assert dep and dep[0].filename == __file__
+
+
+def test_synthesize_shim_stacklevel_points_at_caller(small_net):
+    net, params, _ = small_net
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        synthesize(net, params, forced_mode=ComputeMode.PRECISE,
+                   backend="xla")
+    dep = _deprecation_records(record)
+    assert dep and dep[0].filename == __file__
+
+
+def test_program_cache_get_stacklevel_points_at_caller(small_net):
+    from repro.serving import ProgramCache
+
+    net, params, _ = small_net
+    program = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
+    cache = ProgramCache()
+    cache.admit(program)
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        cache.get(program, 1)
+    dep = _deprecation_records(record)
+    assert dep and dep[0].filename == __file__

@@ -330,15 +330,21 @@ def test_replan_keeps_supplied_plans_device():
 def test_planner_and_roofline_read_the_same_profile():
     """Regression for the old sync-by-comment: the planner's deprecated
     aliases and the roofline benchmark's constants must both be *reads* of
-    the same DeviceProfile object (import-level agreement, no hand sync)."""
+    the same DeviceProfile object (import-level agreement, no hand sync).
+    The planner aliases now warn on access (tests/test_deprecated_shims.py
+    pins the warning); the values must still agree."""
+    import warnings
+
     import benchmarks.roofline as roofline
     from repro.core import planner
 
     assert roofline.PROFILE is TPU_V5E
-    assert planner.PEAK_FLOPS == TPU_V5E.peak_flops_bf16 \
-        == roofline.PEAK_FLOPS
-    assert planner.HBM_BW == TPU_V5E.hbm_bandwidth == roofline.HBM_BW
-    assert planner.RIDGE == TPU_V5E.ridge("bf16")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        assert planner.PEAK_FLOPS == TPU_V5E.peak_flops_bf16 \
+            == roofline.PEAK_FLOPS
+        assert planner.HBM_BW == TPU_V5E.hbm_bandwidth == roofline.HBM_BW
+        assert planner.RIDGE == TPU_V5E.ridge("bf16")
     assert roofline.LINK_BW == TPU_V5E.link_bandwidth
 
 

@@ -1,0 +1,448 @@
+"""Graph-pass pipeline and fused-group dispatch (DESIGN.md §9).
+
+Covers: lowering invariants on the three reference CNNs (every
+conv+bias+ReLU triple becomes one fused group — the PR's acceptance
+criterion), fused-vs-unfused numerical parity (including under the Pallas
+in-kernel epilogue), pass semantics (canonicalize, dead-layer
+elimination), fingerprint non-aliasing, dispatch accounting, the golden
+pass-trace gate, and a hypothesis property suite over random DAGs with
+concat branches.
+"""
+import json
+import os
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cnn import alexnet, googlenet, init_network_params, squeezenet
+from repro.core import (ComputeMode, DispatchStats, ExecutionPlan, GroupPlan,
+                        IMPL_PALLAS, LayerPlan, NetworkDescription,
+                        canonicalize, execute_graph, lower_network,
+                        mode_tolerance, plan_network, run_network, synthesize)
+
+jax.config.update("jax_platform_name", "cpu")
+
+GOLDEN_TRACES = os.path.join(os.path.dirname(__file__), "golden",
+                             "fusion_traces.json")
+
+REFERENCE_NETS = [(alexnet, 0.1, 67), (squeezenet, 0.08, 64),
+                  (googlenet, 0.1, 64)]
+
+
+def _close(got, want, mode=ComputeMode.PRECISE):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    tol = mode_tolerance(mode)
+    np.testing.assert_allclose(got, want, rtol=tol,
+                               atol=tol * max(np.abs(want).max(), 1.0))
+
+
+def _single_consumer_relus(net):
+    """(conv/dense name, relu name) pairs eligible for epilogue fusion."""
+    consumers = {}
+    for l in net.layers:
+        for i in l.inputs:
+            consumers.setdefault(i, []).append(l)
+    pairs = []
+    for l in net.layers:
+        if l.kind not in ("conv", "dense"):
+            continue
+        cons = consumers.get(l.name, [])
+        if len(cons) == 1 and cons[0].kind == "relu":
+            pairs.append((l.name, cons[0].name))
+    return pairs
+
+
+# ------------------------------------------------------ lowering invariants ---
+@pytest.mark.parametrize("builder,scale,hw", REFERENCE_NETS)
+def test_every_conv_bias_relu_triple_fuses(builder, scale, hw):
+    """Acceptance criterion: on the reference CNNs every conv+bias+ReLU
+    triple lowers to a single fused group — one dispatch."""
+    net = builder(scale=scale, num_classes=10, input_hw=hw)
+    graph = lower_network(net)
+    groups = {g.name: g for g in graph.groups}
+    pairs = _single_consumer_relus(net)
+    assert pairs, "reference net lost its conv+relu structure?"
+    for anchor, relu in pairs:
+        g = groups[anchor]
+        assert relu in [l.name for l in g.epilogue], (
+            f"{anchor}+{relu} not fused: {g.describe()}")
+    # Every group is one dispatch; fused groups strictly shrink the count.
+    assert len(graph.groups) < len(net.layers)
+
+
+@pytest.mark.parametrize("builder,scale,hw", REFERENCE_NETS)
+def test_graph_wiring_is_consistent(builder, scale, hw):
+    net = builder(scale=scale, num_classes=10, input_hw=hw)
+    graph = lower_network(net)
+    produced = {"input"}
+    for g in graph.groups:
+        for i in g.inputs:
+            assert i in produced, f"{g.name} consumes unproduced {i}"
+        produced.add(g.output)
+    assert graph.output in produced
+    # members partition the (live) layer set
+    member_names = [l.name for g in graph.groups for l in g.layers]
+    assert len(member_names) == len(set(member_names))
+
+
+def test_lower_with_no_passes_is_one_group_per_layer():
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    graph = lower_network(net, passes=())
+    assert len(graph.groups) == len(net.layers)
+    assert all(not g.fused for g in graph.groups)
+
+
+# ------------------------------------------------------------- pass semantics ---
+def _toy_net():
+    net = NetworkDescription("toy", (3, 12, 12))
+    net.conv("c1", 8, 3, padding="SAME", inputs=("input",))
+    net.relu("r1")
+    net.lrn("n1")
+    net.maxpool("p1", 2, 2)
+    net.conv("c2", 8, 3, padding="SAME")
+    net.relu("r2")
+    net.gap("g")
+    net.dense("d", 4)
+    net.softmax("prob")
+    return net
+
+
+def test_conv_epilogue_and_pointwise_chain_passes():
+    graph = lower_network(_toy_net())
+    by_name = {g.name: g for g in graph.groups}
+    assert [l.name for l in by_name["c1"].layers] == ["c1", "r1"]
+    assert [l.name for l in by_name["c2"].layers] == ["c2", "r2"]
+    # n1 (lrn) is not kernel-fusible into the conv group; it stays its own
+    # pointwise group (nothing adjacent to chain with here).
+    assert [l.name for l in by_name["n1"].layers] == ["n1"]
+    # trailing dense has a softmax consumer -> not a ReLU, not fused.
+    assert [l.name for l in by_name["d"].layers] == ["d"]
+
+
+def test_pointwise_chain_fuses_consecutive_pointwise_layers():
+    net = NetworkDescription("chain", (4, 8, 8))
+    net.maxpool("p0", 2, 2, inputs=("input",))
+    net.relu("r1")
+    net.lrn("n1")
+    net.softmax("s1")
+    graph = lower_network(net)
+    by_name = {g.name: g for g in graph.groups}
+    assert [l.name for l in by_name["r1"].layers] == ["r1", "n1", "s1"]
+
+
+def test_relu_with_multiple_consumers_is_not_fused_into_conv():
+    """SqueezeNet's squeeze ReLU feeds two expand convs: the conv's raw
+    output has one consumer (the relu), so conv+relu fuse — but the *relu*
+    output is shared, so neither expand conv absorbs it."""
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    graph = lower_network(net)
+    by_name = {g.name: g for g in graph.groups}
+    g = by_name["fire2_squeeze1x1"]
+    assert [l.name for l in g.layers] == ["fire2_squeeze1x1", "fire2_sq_relu"]
+    # the two expand convs each consume the fused group's output
+    assert by_name["fire2_expand1x1"].inputs == ("fire2_sq_relu",)
+    assert by_name["fire2_expand3x3"].inputs == ("fire2_sq_relu",)
+
+
+def test_dead_layer_elimination_drops_dangling_branch():
+    net = NetworkDescription("dead", (3, 8, 8))
+    net.conv("c1", 4, 3, padding="SAME", inputs=("input",))
+    net.conv("dangling", 4, 3, padding="SAME", inputs=("c1",))
+    net.relu("dangling_relu", inputs=("dangling",))
+    net.relu("r1", inputs=("c1",))
+    graph = lower_network(net)
+    names = {l.name for g in graph.groups for l in g.layers}
+    assert "dangling" not in names and "dangling_relu" not in names
+    assert any("removed dangling" in t for t in graph.trace)
+    # and the live program still executes
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 8, 8))
+    plan = plan_network(net, graph=graph)
+    _close(run_network(net, params, x, plan=plan),
+           run_network(net, params, x))
+
+
+def test_canonicalize_restores_topological_order():
+    net = _toy_net()
+    shuffled = NetworkDescription("toy", net.input_shape,
+                                  list(reversed(net.layers)))
+    graph = lower_network(shuffled, passes=(canonicalize,))
+    assert len(graph.groups) == len(net.layers)
+    produced = {"input"}
+    for g in graph.groups:
+        assert all(i in produced for i in g.inputs)
+        produced.add(g.output)
+    assert any("reordered" in t for t in graph.trace)
+
+
+def test_canonicalize_rejects_unknown_input():
+    net = NetworkDescription("bad", (3, 8, 8))
+    net.conv("c1", 4, 3, padding="SAME", inputs=("nonexistent",))
+    with pytest.raises(ValueError, match="unknown activation"):
+        lower_network(net)
+
+
+def test_passes_are_pure_and_deterministic():
+    net = googlenet(scale=0.1, num_classes=10, input_hw=64)
+    g1, g2 = lower_network(net), lower_network(net)
+    assert g1.fusion_digest() == g2.fusion_digest()
+    assert g1.trace == g2.trace
+    # canonicalize on an already-canonical program is the identity (modulo
+    # its own trace line)
+    g3 = canonicalize(g1)
+    assert [g.name for g in g3.groups] == [g.name for g in g1.groups]
+
+
+# ------------------------------------------------------------ parity (fused) ---
+@pytest.mark.parametrize("builder,scale,hw", REFERENCE_NETS)
+@pytest.mark.parametrize("mode", [ComputeMode.PRECISE, ComputeMode.RELAXED])
+def test_fused_matches_unfused_reference_nets(builder, scale, hw, mode):
+    """Fused vs. unfused outputs agree within the mode's tolerance on all
+    three paper networks (acceptance criterion)."""
+    net = builder(scale=scale, num_classes=10, input_hw=hw)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, hw, hw))
+    modes = {n: mode for n in net.inexactable_layers}
+    unfused = plan_network(net, modes=modes)
+    fused = plan_network(net, modes=modes, graph=lower_network(net))
+    _close(run_network(net, params, x, plan=fused),
+           run_network(net, params, x, plan=unfused), mode)
+
+
+def test_fused_pallas_group_matches_and_is_kernel_fused():
+    """A conv+relu group routed to the Pallas impl runs the in-kernel
+    bias+ReLU epilogue (one launch) and agrees with the unfused path."""
+    from repro.core import layer_ops
+    from repro.kernels.conv_mapmajor.ops import conv2d_mapmajor  # registers
+
+    net = NetworkDescription("pf", (16, 12, 12))
+    net.conv("c1", 16, 3, padding="SAME", inputs=("input",))
+    net.relu("r1")
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 12, 12))
+    graph = lower_network(net)
+    plan = ExecutionPlan(net.name, {
+        "c1": LayerPlan(impl=IMPL_PALLAS, mode=ComputeMode.RELAXED, u=16)},
+        graph=graph)
+
+    # spy on the fused-epilogue hook: the group must go through it
+    key = ("conv", IMPL_PALLAS)
+    orig, calls = layer_ops.EPILOGUE_IMPLS[key], []
+
+    def spy(layer, lp, p, xx, epilogue):
+        calls.append(layer.name)
+        return orig(layer, lp, p, xx, epilogue)
+
+    layer_ops.EPILOGUE_IMPLS[key] = spy
+    try:
+        got = run_network(net, params, x, plan=plan)
+    finally:
+        layer_ops.EPILOGUE_IMPLS[key] = orig
+    assert calls == ["c1"]
+    assert got.dtype == jnp.bfloat16          # kernel output, not XLA f32
+    want = jnp.maximum(
+        conv2d_mapmajor(x, params["c1"]["w"], params["c1"]["b"],
+                        padding="SAME", mode=ComputeMode.RELAXED, u=16), 0)
+    _close(got, want, ComputeMode.RELAXED)
+    # unfused reference within mode tolerance
+    ref = run_network(net, params, x,
+                      plan=plan.with_graph(None))
+    _close(got, ref, ComputeMode.RELAXED)
+
+
+def test_fused_kernel_epilogue_direct():
+    """conv2d_mapmajor(fuse_bias_relu=True) == relu(conv + b), one call."""
+    from repro.core.parallelism import conv_olp
+    from repro.kernels.conv_mapmajor.ops import conv2d_mapmajor
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 10, 10))
+    w = jax.random.normal(jax.random.PRNGKey(1), (12, 8, 3, 3)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(2), (12,))
+    for mode in (ComputeMode.PRECISE, ComputeMode.RELAXED,
+                 ComputeMode.IMPRECISE):
+        got = conv2d_mapmajor(x, w, b, padding="SAME", mode=mode, u=8,
+                              fuse_bias_relu=True)
+        want = jnp.maximum(conv_olp(x, w, padding="SAME", mode=mode)
+                           + b[None, :, None, None].astype(jnp.float32), 0)
+        _close(got, want, mode)
+
+
+def test_fused_kernel_epilogue_vmem_fallback_applies_relu():
+    """Above the VMEM envelope the fused group falls back to XLA — with
+    the epilogue still applied (same semantics, no silent relu drop)."""
+    from repro.core.parallelism import conv_olp
+    from repro.kernels.conv_mapmajor.ops import conv2d_mapmajor
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 20, 20))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 4, 3, 3)) * 0.1
+    b = jnp.ones((4,)) * 0.05
+    got = conv2d_mapmajor(x, w, b, padding="SAME", mode=ComputeMode.RELAXED,
+                          u=4, vmem_budget=64, fuse_bias_relu=True)
+    want = jnp.maximum(conv_olp(x, w, padding="SAME",
+                                mode=ComputeMode.RELAXED)
+                       + b[None, :, None, None].astype(jnp.float32), 0)
+    _close(got, want, ComputeMode.RELAXED)
+
+
+# ----------------------------------------------------- plan/fingerprint glue ---
+def test_fused_and_unfused_plans_never_alias():
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    graph = lower_network(net)
+    unfused = plan_network(net)
+    fused = plan_network(net, graph=graph)
+    # identical per-layer dispatch entries...
+    assert {n: p.cache_key for n, p in unfused.layers.items()} \
+        == {n: p.cache_key for n, p in fused.layers.items()}
+    # ...but distinct fingerprints (the fusion digest is plan identity)
+    assert unfused.fingerprint() != fused.fingerprint()
+    # same grouping -> same fingerprint (trace/cosmetics excluded)
+    fused2 = plan_network(net, graph=lower_network(net))
+    assert fused.fingerprint() == fused2.fingerprint()
+    # functional updates keep the graph
+    modes = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
+    assert fused.with_modes(modes).graph is graph
+    assert fused.with_layer("conv1", LayerPlan()).graph is graph
+
+
+def test_group_plan_wraps_anchor_plan_and_signature():
+    net = _toy_net()
+    graph = lower_network(net)
+    plan = plan_network(net, graph=graph)
+    g = graph.group("c1")
+    gp = plan.for_group(g)
+    assert isinstance(gp, GroupPlan)
+    assert gp.fused
+    assert gp.members == (("c1", "conv"), ("r1", "relu"))
+    assert gp.plan == plan.for_layer("c1")
+    # fused signature is part of the group's cache identity
+    solo = GroupPlan(name="c1", members=(("c1", "conv"),), plan=gp.plan)
+    assert gp.cache_key != solo.cache_key
+
+
+def test_synthesize_emits_fused_program_by_default():
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 64, 64))
+    labels = jnp.argmax(run_network(net, params, x), -1)
+    prog = synthesize(net, params, validation=(x, labels),
+                      max_degradation=0.25)
+    assert prog.plan.graph is not None
+    assert prog.plan.graph.n_fused_groups > 0
+    rep = prog.report()
+    assert "fused graph" in rep and "pass trace:" in rep
+    assert "fuse-conv-epilogue" in rep
+    # the emitted fused program agrees with the unfused emission
+    unfused = synthesize(net, params, forced_mode=ComputeMode.PRECISE,
+                         fuse=False)
+    assert unfused.plan.graph is None
+    precise = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
+    _close(precise.infer(x), unfused.infer(x))
+    # fused and unfused programs can never share a ProgramCache entry
+    assert precise.fingerprint() != unfused.fingerprint()
+
+
+# --------------------------------------------------------- dispatch counting ---
+def test_execute_graph_counts_one_dispatch_per_group():
+    net = _toy_net()
+    graph = lower_network(net)
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 3, 12, 12))
+    plan = plan_network(net, graph=graph)
+    stats = DispatchStats()
+    acts = execute_graph(graph, plan, params, x, stats=stats)
+    assert stats.dispatches == len(graph.groups)
+    assert stats.layers == graph.n_layers
+    assert stats.fused_groups == graph.n_fused_groups
+    assert stats.dispatches + stats.fused_away == stats.layers
+    # fused intermediates are not materialized
+    assert "c1" not in acts and "r1" in acts
+    _close(acts[graph.output], run_network(net, params, x))
+
+
+# ------------------------------------------------------------- golden traces ---
+def _load_trace_updater():
+    import importlib.util
+    path = os.path.join(os.path.dirname(__file__), "golden",
+                        "update_fusion_traces.py")
+    spec = importlib.util.spec_from_file_location("golden_update_fusion",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_fusion_traces_match_golden():
+    """Fusion decisions are diffable: the pass trace and grouping of the
+    reference nets are pinned; regenerate with
+    PYTHONPATH=src python tests/golden/update_fusion_traces.py"""
+    with open(GOLDEN_TRACES) as f:
+        golden = json.load(f)
+    current = _load_trace_updater().compute_traces()
+    assert current == golden, (
+        "fusion trace drift; if intentional, regenerate with: PYTHONPATH=src "
+        "python tests/golden/update_fusion_traces.py")
+
+
+# ----------------------------------------------------------- property suite ---
+def _random_dag(seed: int) -> NetworkDescription:
+    """A random small DAG with fire/inception-style concat branches."""
+    rng = random.Random(seed)
+    hw = 12
+    net = NetworkDescription(f"rand{seed}", (3, hw, hw))
+    tail = net.conv("stem", rng.choice([4, 6]), rng.choice([1, 3]),
+                    padding="SAME", inputs=("input",))
+    if rng.random() < 0.7:
+        tail = net.relu("stem_relu", inputs=(tail,))
+    if rng.random() < 0.3:
+        tail = net.lrn("stem_lrn", inputs=(tail,))
+    for b in range(rng.randint(1, 2)):
+        branches = []
+        n_branches = rng.randint(2, 3)
+        for i in range(n_branches):
+            t = net.conv(f"b{b}_{i}_conv", rng.choice([2, 4]),
+                         rng.choice([1, 3]), padding="SAME", inputs=(tail,))
+            if rng.random() < 0.8:
+                t = net.relu(f"b{b}_{i}_relu", inputs=(t,))
+            branches.append(t)
+        tail = net.concat(f"b{b}_concat", tuple(branches))
+        if rng.random() < 0.4:
+            tail = net.maxpool(f"b{b}_pool", 2, 2, inputs=(tail,))
+    net.gap("gap", inputs=(tail,))
+    net.dense("fc", 5)
+    if rng.random() < 0.5:
+        net.relu("fc_relu")
+        net.dense("out", 3)
+    net.softmax("prob")
+    return net
+
+
+@pytest.mark.property
+@given(seed=st.integers(0, 10_000),
+       mode=st.sampled_from([ComputeMode.PRECISE, ComputeMode.RELAXED,
+                             ComputeMode.IMPRECISE]))
+@settings(max_examples=12, deadline=None)
+def test_property_fused_matches_unfused_on_random_dags(seed, mode):
+    """Fused vs. unfused numerical parity (within mode tolerance) across
+    random DAGs including GoogLeNet/SqueezeNet-style concat branches."""
+    net = _random_dag(seed)
+    graph = lower_network(net)
+    params = init_network_params(net, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (2, 3, 12, 12))
+    modes = {n: mode for n in net.inexactable_layers}
+    unfused = plan_network(net, modes=modes)
+    fused = plan_network(net, modes=modes, graph=graph)
+    _close(run_network(net, params, x, plan=fused),
+           run_network(net, params, x, plan=unfused), mode)
+    # structural invariants hold for every random DAG
+    produced = {"input"}
+    for g in graph.groups:
+        assert all(i in produced for i in g.inputs)
+        produced.add(g.output)
+    for anchor, relu in _single_consumer_relus(net):
+        g = graph.group(anchor)
+        assert relu in [l.name for l in g.epilogue]

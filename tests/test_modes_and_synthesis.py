@@ -6,9 +6,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.cnn import squeezenet, init_network_params
-from repro.core import (ComputeMode, Parallelism, QuantizedTensor, conv_olp,
-                        mode_dot, quantize_int8, run_network, select_modes,
-                        synthesize)
+from repro.core import (ComputeMode, ExecutionPlan, Parallelism,
+                        QuantizedTensor, conv_olp, mode_dot, quantize_int8,
+                        run_network, select_modes, synthesize)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -95,9 +95,9 @@ def test_synthesized_forced_modes_match_reference(small_net):
 def test_pallas_backend_matches_xla(small_net):
     net, params, x = small_net
     px = synthesize(net, params, forced_mode=ComputeMode.PRECISE,
-                    backend="xla")
+                    plan=ExecutionPlan.uniform(net, backend="xla"))
     pp = synthesize(net, params, forced_mode=ComputeMode.PRECISE,
-                    backend="pallas")
+                    plan=ExecutionPlan.uniform(net, backend="pallas"))
     np.testing.assert_allclose(np.asarray(pp.infer(x)),
                                np.asarray(px.infer(x)), rtol=1e-5, atol=1e-5)
 
@@ -106,7 +106,8 @@ def test_parallelism_policies_agree(small_net):
     net, params, x = small_net
     ref = run_network(net, params, x)
     for par in (Parallelism.FLP, Parallelism.KLP):
-        out = run_network(net, params, x, parallelism=par)
+        plan = ExecutionPlan.uniform(net, parallelism=par)
+        out = run_network(net, params, x, plan=plan)
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=1e-4, atol=1e-4)
 

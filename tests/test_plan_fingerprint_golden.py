@@ -64,6 +64,23 @@ def test_golden_covers_two_devices_with_distinct_fingerprints():
             f"profile is no longer part of plan identity")
 
 
+def test_golden_covers_fused_cases_with_distinct_fingerprints():
+    """The golden set pins fused-group identity: every ``.fused`` case's
+    unfused counterpart must be present and distinct — a shared value would
+    mean the ProgramCache could serve an unfused executable for a fused
+    plan (or vice versa), though their per-layer entries are identical."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    fused_cases = {n for n in golden if n.endswith(".fused")}
+    assert fused_cases, f"no fused-group cases in the golden set; {UPDATE_HINT}"
+    for case in fused_cases:
+        counterpart = case[: -len(".fused")]
+        assert counterpart in golden, (case, UPDATE_HINT)
+        assert golden[case] != golden[counterpart], (
+            f"{case} shares a fingerprint with {counterpart} — the fusion "
+            f"digest is no longer part of plan identity")
+
+
 def test_fingerprint_distinct_across_devices_live():
     """Same check, computed live (not just pinned in the file)."""
     from repro.cnn import squeezenet

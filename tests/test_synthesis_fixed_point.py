@@ -116,9 +116,14 @@ def test_cycle_broken_deterministically(tiny, monkeypatch):
     assert len(r.iterations) == 3          # A, B, A-again -> cycle detected
 
     # expected winner: min (fingerprint, modes-key) between the two states
+    # (re-planned the way the loop re-plans: through the fused graph)
+    from repro.core import lower_network
+
+    graph = lower_network(net)
+
     def state(mode):
         modes = {n: mode for n in net.inexactable_layers}
-        plan = plan_network(net, modes=modes)
+        plan = plan_network(net, modes=modes, graph=graph)
         return (plan.fingerprint(),
                 tuple(sorted((n, m.value) for n, m in modes.items()))), mode
     expected_key, expected_mode = min(
