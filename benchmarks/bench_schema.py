@@ -35,6 +35,10 @@ REQUIRED_METRICS: Dict[str, List[str]] = {
                        "googlenet_dispatches_fused",
                        "googlenet_dispatch_reduction",
                        "googlenet_latency_speedup"],
+    "int8_speedup": ["nets", "total_int8_layers",
+                     "googlenet_dispatches_int8",
+                     "googlenet_latency_speedup",
+                     "max_parity_diff"],
 }
 
 

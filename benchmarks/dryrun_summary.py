@@ -1,4 +1,6 @@
-"""Summarize results/dryrun/*.json into the §Dry-run table."""
+"""Summarize results/dryrun/*.json into the §Dry-run table, plus a rollup
+of every ``BENCH_*.json`` suite document present (fusion, int8, serving,
+...), so one invocation surfaces the whole dry-run artifact set."""
 from __future__ import annotations
 
 import glob
@@ -49,8 +51,29 @@ def build(results_dir: str = "results/dryrun", variants: bool = False) -> str:
     return header + "\n" + "\n".join(rows)
 
 
+def bench_rollup(bench_dir: str = ".") -> list:
+    """One CSV row per headline metric of every BENCH_*.json document
+    (BENCH_fusion.json, BENCH_int8.json, ...): the suite schema guarantees
+    ``metrics`` is a flat name -> finite-number map, so the rollup needs no
+    per-suite knowledge.  Unreadable documents produce an error row rather
+    than silently vanishing from the summary."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        base = os.path.basename(path)[:-5]
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            suite = doc.get("benchmark", base)
+            for name, value in sorted(doc.get("metrics", {}).items()):
+                rows.append(f"bench.{suite}.{name},{value},")
+        except (OSError, json.JSONDecodeError, AttributeError) as e:
+            rows.append(f"bench.{base}.error,0,{type(e).__name__}")
+    return rows
+
+
 def run():
-    """CSV rows for benchmarks.run: count of ok/skip/error."""
+    """CSV rows for benchmarks.run: count of ok/skip/error pairs, plus the
+    headline metrics of every BENCH_*.json suite document present."""
     import collections
     counts = collections.Counter()
     for path in glob.glob("results/dryrun/*.json"):
@@ -58,8 +81,11 @@ def run():
             continue
         with open(path) as f:
             counts[json.load(f).get("status", "?")] += 1
-    return [f"dryrun.pairs.{k},{v}," for k, v in sorted(counts.items())]
+    rows = [f"dryrun.pairs.{k},{v}," for k, v in sorted(counts.items())]
+    return rows + bench_rollup()
 
 
 if __name__ == "__main__":
     print(build())
+    for row in bench_rollup():
+        print(row)

@@ -12,7 +12,7 @@ import traceback
 def main() -> None:
     fast = "--fast" in sys.argv
     reps = 4 if fast else 8
-    from . import (device_sweep, fusion_speedup, mode_selection,
+    from . import (device_sweep, fusion_speedup, int8_speedup, mode_selection,
                    table1_speedup, table2_energy_proxy, table3_vs_klp_flp)
     suites = [
         ("table1_speedup", lambda: table1_speedup.run(reps=reps)),
@@ -21,6 +21,7 @@ def main() -> None:
         ("mode_selection", lambda: mode_selection.run()),
         ("device_sweep", lambda: device_sweep.run(reps=reps)),
         ("fusion_speedup", lambda: fusion_speedup.run(reps=reps)),
+        ("int8_speedup", lambda: int8_speedup.run(reps=reps)),
     ]
     try:
         from . import dryrun_summary, roofline

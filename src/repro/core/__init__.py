@@ -32,11 +32,14 @@ from .plan import (DEFAULT_LAYER_PLAN, IMPL_DEFAULT, IMPL_PALLAS,
                    ValidationRecord)
 from .planner import (PlannerConfig, autotune_plan, plan_network,
                       trace_shapes)
-from .precision import (MODES_FASTEST_FIRST, ComputeMode, QuantizedTensor,
-                        mode_dot, mode_tolerance, prepare_operand,
-                        prepare_weight, quantize_int8, resolve_weight)
+from .precision import (MODES_FASTEST_FIRST, ComputeMode, QParams,
+                        QuantizedTensor, calibrate_act_scale,
+                        fake_quantize_act, mode_dot, mode_tolerance,
+                        prepare_operand, prepare_weight, quantize_act_int8,
+                        quantize_int8, resolve_weight, weight_channel_axis)
 from .synthesizer import (MAX_SYNTHESIS_ITERATIONS, BatchProgram,
-                          SynthesizedProgram, synthesize)
+                          SynthesizedProgram, calibrate_activation_qparams,
+                          synthesize)
 
 __all__ = [
     "LANES", "from_map_major", "mapmajor_scatter_order", "num_groups",
@@ -55,8 +58,10 @@ __all__ = [
     "IMPL_XLA", "ExecutionPlan", "GroupPlan", "IterationRecord", "LayerPlan",
     "SynthesisReport", "ValidationRecord",
     "PlannerConfig", "autotune_plan", "plan_network", "trace_shapes",
-    "MODES_FASTEST_FIRST", "ComputeMode", "QuantizedTensor", "mode_dot",
-    "mode_tolerance", "prepare_operand", "prepare_weight", "quantize_int8",
-    "resolve_weight", "BatchProgram", "MAX_SYNTHESIS_ITERATIONS",
-    "SynthesizedProgram", "synthesize",
+    "MODES_FASTEST_FIRST", "ComputeMode", "QParams", "QuantizedTensor",
+    "calibrate_act_scale", "fake_quantize_act", "mode_dot", "mode_tolerance",
+    "prepare_operand", "prepare_weight", "quantize_act_int8", "quantize_int8",
+    "resolve_weight", "weight_channel_axis",
+    "BatchProgram", "MAX_SYNTHESIS_ITERATIONS", "SynthesizedProgram",
+    "calibrate_activation_qparams", "synthesize",
 ]

@@ -29,7 +29,7 @@ from typing import (TYPE_CHECKING, Dict, Iterable, Iterator, List, Mapping,
 from ..device.profile import DEFAULT_PROFILE, DeviceProfile
 from .layout import LANES
 from .parallelism import Parallelism
-from .precision import ComputeMode
+from .precision import ComputeMode, QParams
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .graph import FusedGroup, GraphProgram
@@ -58,22 +58,32 @@ class LayerPlan:
     #: at compile time, so two plans differing only here can compile
     #: different programs.
     vmem_budget: Optional[int] = None
+    #: Activation quantization parameters for the true int8 datapath
+    #: (IMPRECISE_INT8 only; the synthesizer's calibration pass attaches
+    #: them).  Part of ``cache_key``: a quantized program and its float
+    #: counterpart — or two programs calibrated to different scales —
+    #: compile different epilogues and must never alias in the
+    #: ProgramCache.
+    qparams: Optional[QParams] = None
 
     def with_mode(self, mode: ComputeMode) -> "LayerPlan":
         return replace(self, mode=mode)
 
     @property
-    def cache_key(self) -> Tuple[str, str, str, int, int]:
+    def cache_key(self) -> Tuple[str, str, str, int, int, Optional[tuple]]:
         """The execution-relevant projection of this plan.  ``reason`` is
         documentation, not dispatch — two plans that differ only in their
         cost-rule notes compile to the same program.  ``vmem_budget``
         enters as the value dispatch actually uses (None means the
         default profile's budget), so an explicit default and an
-        unspecified one still alias."""
+        unspecified one still alias.  ``qparams`` enters as its hashable
+        key (None for float programs): quantized and float dispatch never
+        alias."""
         vb = self.vmem_budget if self.vmem_budget is not None \
             else DEFAULT_PROFILE.vmem_budget
+        qp = self.qparams.key if self.qparams is not None else None
         return (self.impl, self.parallelism.value, self.mode.value, self.u,
-                vb)
+                vb, qp)
 
     def describe(self) -> str:
         bits = [self.impl, self.parallelism.value, self.mode.value,
@@ -167,6 +177,18 @@ class ExecutionPlan:
                              origin=self.origin, profile=self.profile,
                              graph=graph)
 
+    def with_qparams(self, qparams: Mapping[str, Optional[QParams]]
+                     ) -> "ExecutionPlan":
+        """Overlay activation quantization parameters (the synthesizer's
+        calibration output) onto the named layers; ``None`` clears."""
+        if not qparams:
+            return self
+        new = dict(self.layers)
+        for name, qp in qparams.items():
+            new[name] = replace(new.get(name, DEFAULT_LAYER_PLAN), qparams=qp)
+        return ExecutionPlan(self.net_name, new, origin=self.origin,
+                             profile=self.profile, graph=self.graph)
+
     @property
     def modes(self) -> Dict[str, ComputeMode]:
         return {n: p.mode for n, p in self.layers.items()}
@@ -194,8 +216,9 @@ class ExecutionPlan:
         h.update(self.net_name.encode())
         h.update(f"@{self.profile.identity()}".encode())
         for name in sorted(self.layers):
-            impl, par, mode, u, vb = self.layers[name].cache_key
-            h.update(f"|{name}={impl},{par},{mode},{u},vb{vb}".encode())
+            impl, par, mode, u, vb, qp = self.layers[name].cache_key
+            h.update(f"|{name}={impl},{par},{mode},{u},vb{vb},"
+                     f"qp{qp}".encode())
         if self.graph is not None:
             h.update(f"!fusion={self.graph.fusion_digest()}".encode())
         return h.hexdigest()[:16]
@@ -328,6 +351,9 @@ class SynthesisReport:
     fallbacks: List[str] = field(default_factory=list)
     validated: bool = False
     gate_skipped_reason: Optional[str] = None    # e.g. forced_mode, no val set
+    #: Calibrated per-tensor activation scales for the layers the shipped
+    #: program runs under IMPRECISE_INT8 (empty when no int8 layer ships).
+    act_scales: Dict[str, float] = field(default_factory=dict)
 
     @property
     def final_validation(self) -> Optional[ValidationRecord]:
@@ -356,4 +382,9 @@ class SynthesisReport:
                              f"{'ok' if v.passed else 'over budget'}")
             for fb in self.fallbacks:
                 lines.append(f"  fallback: {fb}")
+        if self.act_scales:
+            lines.append(f"int8 calibration : {len(self.act_scales)} "
+                         "layer(s), per-tensor activation scales "
+                         + ", ".join(f"{n}={s:.3g}"
+                                     for n, s in sorted(self.act_scales.items())))
         return "\n".join(lines)

@@ -161,6 +161,9 @@ class LayerCost:
     bytes: float
     #: The device whose roofline turns counts into seconds.
     profile: DeviceProfile = DEFAULT_PROFILE
+    #: The arithmetic the layer's mode actually runs ("bf16" or "int8") —
+    #: selects which peak-FLOP rate and ridge the roofline terms use.
+    dtype: str = "bf16"
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -168,7 +171,7 @@ class LayerCost:
 
     @property
     def compute_seconds(self) -> float:
-        return self.flops / self.profile.peak_flops("bf16")
+        return self.flops / self.profile.peak_flops(self.dtype)
 
     @property
     def memory_seconds(self) -> float:
@@ -180,9 +183,21 @@ class LayerCost:
                 else "memory")
 
 
+def mode_cost_dtype(mode: ComputeMode) -> str:
+    """Roofline arithmetic class of a mode: the true int8 datapath moves
+    1-byte operands at the int8 MXU rate; every other mode is costed as
+    bf16 (PRECISE's f32 penalty is folded into the joint XLA invariant)."""
+    return "int8" if mode is ComputeMode.IMPRECISE_INT8 else "bf16"
+
+
+def _mode_bytes_per_el(mode: ComputeMode) -> int:
+    return 1 if mode is ComputeMode.IMPRECISE_INT8 else 2
+
+
 def conv_cost(cin: int, h: int, w: int, layer: Layer, batch: int,
               bytes_per_el: int = 2,
-              profile: DeviceProfile = DEFAULT_PROFILE) -> LayerCost:
+              profile: DeviceProfile = DEFAULT_PROFILE,
+              dtype: str = "bf16") -> LayerCost:
     ho = _spatial_out(h, layer.kernel, layer.stride, layer.padding)
     wo = _spatial_out(w, layer.kernel, layer.stride, layer.padding)
     m, k = layer.out_channels, layer.kernel
@@ -190,14 +205,15 @@ def conv_cost(cin: int, h: int, w: int, layer: Layer, batch: int,
     byts = bytes_per_el * (batch * cin * h * w          # input read
                            + m * cin * k * k            # weights read
                            + batch * m * ho * wo)       # output write
-    return LayerCost(flops, byts, profile)
+    return LayerCost(flops, byts, profile, dtype)
 
 
 def dense_cost(k: int, n: int, batch: int, bytes_per_el: int = 2,
-               profile: DeviceProfile = DEFAULT_PROFILE) -> LayerCost:
+               profile: DeviceProfile = DEFAULT_PROFILE,
+               dtype: str = "bf16") -> LayerCost:
     flops = 2.0 * batch * k * n
     byts = bytes_per_el * (batch * k + k * n + batch * n)
-    return LayerCost(flops, byts, profile)
+    return LayerCost(flops, byts, profile, dtype)
 
 
 def _pow2_at_least(n: int) -> int:
@@ -224,20 +240,27 @@ def fused_cost(cost: LayerCost, out_elements: float,
     if epilogue_ops <= 0:
         return cost
     return LayerCost(cost.flops + epilogue_ops * out_elements, cost.bytes,
-                     cost.profile)
+                     cost.profile, cost.dtype)
 
 
 def _plan_conv(layer: Layer, cin: int, h: int, w: int,
                cfg: PlannerConfig, mode: ComputeMode,
                epilogue_ops: int = 0) -> LayerPlan:
-    cost = conv_cost(cin, h, w, layer, cfg.batch, profile=cfg.profile)
+    # IMPRECISE_INT8 is costed as the true int8 datapath: 1-byte operand
+    # traffic against the int8 MXU rate's ridge — routing decisions must
+    # reflect the arithmetic the kernel actually runs, not the bf16 rate
+    # the old dequantizing path fell back to.
+    cost_dtype = mode_cost_dtype(mode)
+    cost = conv_cost(cin, h, w, layer, cfg.batch,
+                     bytes_per_el=_mode_bytes_per_el(mode),
+                     profile=cfg.profile, dtype=cost_dtype)
     ho = _spatial_out(h, layer.kernel, layer.stride, layer.padding)
     wo = _spatial_out(w, layer.kernel, layer.stride, layer.padding)
     cost = fused_cost(cost, cfg.batch * layer.out_channels * ho * wo,
                       epilogue_ops)
     u = _choose_u(cin, layer.out_channels, cfg)
     ai = cost.arithmetic_intensity
-    ridge = cfg.profile.ridge("bf16")
+    ridge = cfg.profile.ridge(cost_dtype)
     fused_note = f" [fused+{epilogue_ops} epilogue]" if epilogue_ops else ""
 
     def mk(impl: str, reason: str) -> LayerPlan:
@@ -265,18 +288,19 @@ def _plan_conv(layer: Layer, cin: int, h: int, w: int,
     compute_bound = ai >= cfg.compute_bound_fraction * ridge
     if compute_bound and not narrow:
         return mk(IMPL_PALLAS,
-                  f"rule3: compute-bound (AI={ai:.0f} >= ridge {ridge:.0f}, "
-                  f"{cfg.profile.name})")
+                  f"rule3: compute-bound (AI={ai:.0f} >= {cost_dtype} ridge "
+                  f"{ridge:.0f}, {cfg.profile.name})")
     why = (f"rule3: narrow ({min(cin, layer.out_channels)} ch)" if narrow
-           else f"rule3: memory-bound (AI={ai:.0f} < ridge {ridge:.0f}, "
-                f"{cfg.profile.name})")
+           else f"rule3: memory-bound (AI={ai:.0f} < {cost_dtype} ridge "
+                f"{ridge:.0f}, {cfg.profile.name})")
     return mk(IMPL_XLA, why)
 
 
 def _plan_dense(layer: Layer, in_features: int, cfg: PlannerConfig,
                 mode: ComputeMode, epilogue_ops: int = 0) -> LayerPlan:
     cost = dense_cost(in_features, layer.out_channels, cfg.batch,
-                      profile=cfg.profile)
+                      bytes_per_el=_mode_bytes_per_el(mode),
+                      profile=cfg.profile, dtype=mode_cost_dtype(mode))
     cost = fused_cost(cost, cfg.batch * layer.out_channels, epilogue_ops)
     u = _choose_u(in_features, layer.out_channels, cfg)
     fused_note = f" [fused+{epilogue_ops} epilogue]" if epilogue_ops else ""
@@ -408,7 +432,8 @@ def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
         for impl in layer_candidates:
             cand = LayerPlan(impl=impl, parallelism=base.parallelism,
                              mode=base.mode, u=base.u,
-                             vmem_budget=base.vmem_budget)
+                             vmem_budget=base.vmem_budget,
+                             qparams=base.qparams)
             if group is not None:
                 gp = GroupPlan(name=group.name, members=group.signature(),
                                plan=cand)
@@ -426,7 +451,7 @@ def autotune_plan(net: NetworkDescription, params, x: jnp.ndarray,
         t_best, impl_best = min(timings)
         tuned[l.name] = LayerPlan(
             impl=impl_best, parallelism=base.parallelism, mode=base.mode,
-            u=base.u, vmem_budget=base.vmem_budget,
+            u=base.u, vmem_budget=base.vmem_budget, qparams=base.qparams,
             reason=f"autotune: {t_best * 1e6:.0f}us best of "
                    f"{len(timings)}")
     return ExecutionPlan(net.name, tuned, origin="autotune",

@@ -10,8 +10,13 @@ Modes (fastest last):
   PRECISE        f32 storage, f32 math, HIGHEST XLA precision.
   RELAXED        bf16 operands, f32 accumulation (MXU native mode).
   IMPRECISE      bf16 operands *and* bf16 accumulation / outputs.
-  IMPRECISE_INT8 int8 per-output-channel weight quantization, bf16 activations
-                 (beyond-paper extension; recorded separately in experiments).
+  IMPRECISE_INT8 int8 per-output-channel weight quantization plus static
+                 per-tensor symmetric activation quantization (:class:`QParams`,
+                 calibrated by the synthesizer).  With qparams on the layer's
+                 plan the map-major kernels run the true int8 datapath —
+                 int8 x int8 -> int32 accumulation with a fused
+                 dequant(+bias+ReLU) epilogue at flush; without them the
+                 weights dequantize to bf16 (the pre-calibration fallback).
 """
 from __future__ import annotations
 
@@ -105,6 +110,61 @@ def quantize_int8(w: jnp.ndarray, *, channel_axis: int = 0) -> QuantizedTensor:
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
     return QuantizedTensor(q=q, scale=scale)
+
+
+def weight_channel_axis(kind: str) -> int:
+    """The *output*-channel axis of a layer kind's weight tensor — the axis
+    per-channel scales must live on for the int8 epilogue to fold them after
+    the int32 accumulation.  Conv weights are OIHW (axis 0); dense weights
+    are (K, N) (axis 1)."""
+    return 1 if kind == "dense" else 0
+
+
+@dataclass(frozen=True)
+class QParams:
+    """Static per-tensor symmetric int8 activation quantization parameters.
+
+    Produced by the synthesizer's calibration pass (amax over the
+    calibration set / 127) and carried on :class:`~repro.core.plan.LayerPlan`
+    — part of the plan's ``cache_key``/fingerprint, so a quantized program
+    can never alias its float counterpart in the ProgramCache.  Symmetric:
+    ``zero_point`` is always 0 today (zero-padding stays exact in int8);
+    the field exists so asymmetric schemes extend the key, not the hash.
+    """
+    act_scale: float
+    zero_point: int = 0
+
+    def __post_init__(self):
+        if not self.act_scale > 0:
+            raise ValueError(f"act_scale must be > 0, got {self.act_scale}")
+        if self.zero_point != 0:
+            raise ValueError("only symmetric quantization (zero_point=0) "
+                             "is implemented")
+
+    @property
+    def key(self) -> tuple:
+        """Hashable projection for plan cache keys / fingerprints."""
+        return (float(self.act_scale), int(self.zero_point))
+
+
+def quantize_act_int8(x: jnp.ndarray, act_scale) -> jnp.ndarray:
+    """Activation tensor -> int8 under a static per-tensor symmetric scale."""
+    q = jnp.round(x.astype(jnp.float32) / act_scale)
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def fake_quantize_act(x: jnp.ndarray, act_scale) -> jnp.ndarray:
+    """Quantize-dequantize round trip (float in, float out): the XLA
+    fallback applies it so over-VMEM int8 layers track the kernel path's
+    activation rounding instead of silently running full-precision."""
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / act_scale), -127, 127)
+    return q * act_scale
+
+
+def calibrate_act_scale(x: jnp.ndarray) -> QParams:
+    """Per-tensor symmetric scale from an activation sample: amax / 127."""
+    amax = float(jnp.max(jnp.abs(x.astype(jnp.float32))))
+    return QParams(act_scale=amax / 127.0 if amax > 0 else 1.0)
 
 
 def prepare_operand(x: jnp.ndarray, mode: ComputeMode) -> jnp.ndarray:

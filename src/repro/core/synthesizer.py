@@ -58,12 +58,14 @@ from ..device import DeviceProfile, resolve_profile
 from .graph import lower_network
 from .layout import LANES, weights_to_map_major
 from .mode_selector import ModeSelectionReport, refine_plan
-from .network import NetworkDescription, run_network
+from .network import NetworkDescription, collect_activations, run_network
 from .parallelism import Parallelism
 from .plan import (ExecutionPlan, IterationRecord, SynthesisReport,
                    ValidationRecord, enforce_precise_xla)
 from .planner import PlannerConfig, autotune_plan, plan_network
-from .precision import MODES_FASTEST_FIRST, ComputeMode, prepare_weight
+from .precision import (MODES_FASTEST_FIRST, ComputeMode, QParams,
+                        calibrate_act_scale, prepare_weight,
+                        weight_channel_axis)
 
 #: Fixed-point iteration cap: plan -> probe -> re-plan rounds before the
 #: deterministic tie-break picks among the visited states.
@@ -209,20 +211,62 @@ class SynthesizedProgram:
         return "\n".join(lines)
 
 
-def _accuracy_eval(net, params, images, labels):
+def calibrate_activation_qparams(
+        net: NetworkDescription, params,
+        images: jnp.ndarray) -> Dict[str, QParams]:
+    """Int8 activation calibration: static per-tensor symmetric scales.
+
+    Runs the float network once over the calibration set (the same images
+    the Stage-C probes and the validation gate use) and records, for every
+    parametric layer, ``amax(|input activation|) / 127`` — the scale the
+    int8 kernels quantize that layer's activations with at serving time.
+    Computed once per synthesis: the scales are *static*, part of the
+    layer's plan (and so of the plan fingerprint / ProgramCache identity),
+    never recomputed per request.
+    """
+    acts = collect_activations(net, params, images)
+    out: Dict[str, QParams] = {}
+    for l in net.param_layers:
+        out[l.name] = calibrate_act_scale(acts[l.inputs[0]])
+    return out
+
+
+def _attach_qparams(plan: ExecutionPlan,
+                    act_qparams: Optional[Dict[str, QParams]]
+                    ) -> ExecutionPlan:
+    """Attach calibrated activation qparams to exactly the INT8-mode layers.
+
+    Every other calibrated layer gets ``qparams=None`` — a layer demoted
+    out of IMPRECISE_INT8 must also lose its quantization identity, or its
+    fingerprint would keep aliasing the quantized program.  Re-planning
+    rebuilds LayerPlans from scratch, so this runs after every ``_replan``.
+    """
+    if not act_qparams:
+        return plan
+    overlay = {name: (qp if plan.for_layer(name).mode is
+                      ComputeMode.IMPRECISE_INT8 else None)
+               for name, qp in act_qparams.items()}
+    return plan.with_qparams(overlay)
+
+
+def _accuracy_eval(net, params, images, labels, act_qparams=None):
     """Top-1 accuracy under a candidate plan (modes overlaid per probe).
 
     Weight-quantizing modes are applied to the probe's weights before
     evaluation — the selector must measure the program Stage B will emit,
     not the raw-weight network (casting-only modes need no preparation:
-    the ops cast operands themselves)."""
+    the ops cast operands themselves).  With calibrated activation qparams
+    the probe attaches them to its INT8-mode layers first, so Stage C
+    measures the true int8 datapath the final program would dispatch."""
     def evaluate_plan(p: ExecutionPlan) -> float:
+        p = _attach_qparams(p, act_qparams)
         probed = {}
         for l in net.param_layers:
             mode = p.for_layer(l.name).mode
             if mode.quantizes_weights:
                 lp = dict(params[l.name])
-                lp["w"] = prepare_weight(lp["w"], mode, channel_axis=0)
+                lp["w"] = prepare_weight(
+                    lp["w"], mode, channel_axis=weight_channel_axis(l.kind))
                 probed[l.name] = lp
             else:
                 probed[l.name] = params[l.name]
@@ -270,7 +314,8 @@ def _prepare_params(net: NetworkDescription, params,
     prepared = {}
     for l in net.param_layers:
         p = dict(params[l.name])
-        p["w"] = prepare_weight(p["w"], modes[l.name], channel_axis=0)
+        p["w"] = prepare_weight(p["w"], modes[l.name],
+                                channel_axis=weight_channel_axis(l.kind))
         if "b" in p:
             p["b"] = p["b"].astype(jnp.float32)
         prepared[l.name] = p
@@ -409,6 +454,22 @@ def synthesize(net: NetworkDescription,
             raise ValueError("autotune=True needs autotune_input= or a "
                              "validation set")
 
+    # Int8 activation calibration: when IMPRECISE_INT8 can ship (opt-in via
+    # allow_int8, pinned via forced_mode, or present on a supplied plan),
+    # compute the static per-tensor activation scales once, up front, over
+    # the calibration images.  The scales are attached to exactly the
+    # INT8-mode layers after every (re-)planning step below; without
+    # calibration images the int8 layers keep the dequant fallback.
+    wants_int8 = (allow_int8
+                  or forced_mode is ComputeMode.IMPRECISE_INT8
+                  or any(lp.mode is ComputeMode.IMPRECISE_INT8
+                         for lp in plan.layers.values()))
+    calib_x = (validation[0] if validation is not None
+               else autotune_input)
+    act_qparams: Optional[Dict[str, QParams]] = None
+    if wants_int8 and calib_x is not None:
+        act_qparams = calibrate_activation_qparams(net, params, calib_x)
+
     mode_report: Optional[ModeSelectionReport] = None
     if forced_mode is not None or validation is None:
         # Single-pass path: modes are pinned (forced_mode) or defaulted
@@ -416,7 +477,8 @@ def synthesize(net: NetworkDescription,
         # could measure them against.
         modes = {n: forced_mode or ComputeMode.RELAXED
                  for n in net.inexactable_layers}
-        plan = _replan(net, plan, modes, planner_config)
+        plan = _attach_qparams(_replan(net, plan, modes, planner_config),
+                               act_qparams)
         if autotune:
             plan = autotune_plan(net, params, tune_x, plan)
         synthesis_report = SynthesisReport(
@@ -424,6 +486,10 @@ def synthesize(net: NetworkDescription,
             gate_skipped_reason=("forced_mode pins Stage C"
                                  if forced_mode is not None
                                  else "no validation set"))
+        if act_qparams:
+            synthesis_report.act_scales = {
+                n: float(qp.act_scale) for n, qp in act_qparams.items()
+                if plan.for_layer(n).qparams is not None}
         program = SynthesizedProgram(
             net=net, plan=plan, modes=modes,
             parallelism=_dominant_policy(net, plan),
@@ -434,7 +500,7 @@ def synthesize(net: NetworkDescription,
 
     # ---- Fixed-point loop: plan -> mode probe -> re-plan -> re-probe ------
     images, labels = validation
-    evaluate_plan = _accuracy_eval(net, params, images, labels)
+    evaluate_plan = _accuracy_eval(net, params, images, labels, act_qparams)
     layer_names = net.inexactable_layers
     synthesis_report = SynthesisReport(max_iterations=max_iterations)
     seen: Dict[tuple, int] = {}                  # state key -> states index
@@ -443,7 +509,7 @@ def synthesize(net: NetworkDescription,
     precise_modes = {n: ComputeMode.PRECISE for n in layer_names}
     probe_reference: Optional[float] = None
     probe_reference_fp: Optional[str] = None
-    current = plan
+    current = _attach_qparams(plan, act_qparams)
 
     for i in range(1, max_iterations + 1):
         if autotune:
@@ -461,7 +527,9 @@ def synthesize(net: NetworkDescription,
                                      reference=probe_reference)
         probe_reference = report.reference_metric
         modes = report.modes
-        next_plan = _replan(net, probed, modes, planner_config)
+        probed = _attach_qparams(probed, act_qparams)
+        next_plan = _attach_qparams(
+            _replan(net, probed, modes, planner_config), act_qparams)
         key = (next_plan.fingerprint(), _modes_key(modes))
         synthesis_report.iterations.append(IterationRecord(
             index=i, plan_fingerprint=next_plan.fingerprint(),
@@ -514,7 +582,8 @@ def synthesize(net: NetworkDescription,
     # Reference: the all-PRECISE program, *emitted* (prepared weights,
     # jitted plan dispatch) — the same path the candidate runs, so the
     # all-PRECISE fallback floor is degradation-free by construction.
-    ref_plan = _replan(net, current, precise_modes, planner_config)
+    ref_plan = _attach_qparams(
+        _replan(net, current, precise_modes, planner_config), act_qparams)
     ref_program = SynthesizedProgram(
         net=net, plan=ref_plan, modes=precise_modes,
         parallelism=_dominant_policy(net, ref_plan),
@@ -553,9 +622,14 @@ def synthesize(net: NetworkDescription,
             f"measured degradation {degradation:.4f} > budget "
             f"{max_degradation:.4f}: demoted {', '.join(changed)}")
         cand_modes = demoted
-        cand_plan = _replan(net, cand_plan, cand_modes, planner_config)
+        cand_plan = _attach_qparams(
+            _replan(net, cand_plan, cand_modes, planner_config), act_qparams)
 
     synthesis_report.validated = passed
+    if act_qparams:
+        synthesis_report.act_scales = {
+            n: float(qp.act_scale) for n, qp in act_qparams.items()
+            if program.plan.for_layer(n).qparams is not None}
     if synthesis_report.fallbacks and mode_report is not None:
         # Stage C's selection was rejected by the gate: the shipped report
         # must describe the shipped program, not the rejected candidate.

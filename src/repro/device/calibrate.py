@@ -68,14 +68,24 @@ def measure_matmul_flops(dtype=jnp.bfloat16, *,
                          sizes: Sequence[int] = MATMUL_SWEEP,
                          reps: int = 3, clock: Clock = time.perf_counter,
                          seed: int = 0) -> float:
-    """Best sustained matmul FLOP/s over a size sweep (2*n^3 per call)."""
+    """Best sustained matmul FLOP/s over a size sweep (2*n^3 per call).
+
+    Integer dtypes (the int8 datapath sweep) use uniform int8-range
+    operands and ``preferred_element_type=int32`` — the same MXU
+    configuration the int8 kernels request — so the measured rate is the
+    rate IMPRECISE_INT8 groups are costed against."""
+    integer = jnp.issubdtype(jnp.dtype(dtype), jnp.integer)
+    acc = jnp.int32 if integer else jnp.float32
     best_rate = 0.0
     for n in sizes:
         key = jax.random.PRNGKey(seed)
-        a = jax.random.normal(key, (n, n), dtype=jnp.float32).astype(dtype)
-        b = jax.random.normal(key, (n, n), dtype=jnp.float32).astype(dtype)
-        f = jax.jit(lambda x, y: jnp.dot(x, y,
-                                         preferred_element_type=jnp.float32))
+        if integer:
+            a = jax.random.randint(key, (n, n), -127, 128, jnp.int32).astype(dtype)
+            b = jax.random.randint(key, (n, n), -127, 128, jnp.int32).astype(dtype)
+        else:
+            a = jax.random.normal(key, (n, n), dtype=jnp.float32).astype(dtype)
+            b = jax.random.normal(key, (n, n), dtype=jnp.float32).astype(dtype)
+        f = jax.jit(lambda x, y: jnp.dot(x, y, preferred_element_type=acc))
         t = _best_seconds(lambda: f(a, b), reps, clock)
         best_rate = max(best_rate, 2.0 * n ** 3 / t)
     return best_rate
@@ -106,9 +116,10 @@ def calibrate(base: Optional[DeviceProfile] = None, *,
 
     ``base`` supplies the fields microbenchmarks cannot see (VMEM budget,
     lane width, link bandwidth, Pallas support); defaults to the builtin
-    matching this backend.  int8 peak is scaled from the measured bf16 rate
-    by the base profile's datasheet int8/bf16 ratio — int8 matmul is not
-    portably measurable across backends.
+    matching this backend.  int8 peak is *measured* with its own sweep —
+    int8 x int8 -> int32 matmuls, the exact MXU configuration the
+    IMPRECISE_INT8 kernels run — so the planner's int8 ridge reflects this
+    host's real integer throughput rather than a datasheet ratio.
     """
     if base is None:
         base = TPU_V5E if jax.default_backend() == "tpu" else CPU_INTERPRET
@@ -116,14 +127,15 @@ def calibrate(base: Optional[DeviceProfile] = None, *,
                                 clock=clock, seed=seed)
     f32 = measure_matmul_flops(jnp.float32, sizes=sizes, reps=reps,
                                clock=clock, seed=seed)
+    int8 = measure_matmul_flops(jnp.int8, sizes=sizes, reps=reps,
+                                clock=clock, seed=seed)
     bw = measure_stream_bandwidth(sizes=stream_sizes, reps=reps, clock=clock,
                                   seed=seed)
-    int8_ratio = base.peak_flops_int8 / base.peak_flops_bf16
     return replace(
         base,
         peak_flops_bf16=bf16,
         peak_flops_f32=f32,
-        peak_flops_int8=bf16 * int8_ratio,
+        peak_flops_int8=int8,
         hbm_bandwidth=bw,
         source="calibrated",
         description=(f"calibrated on backend={jax.default_backend()} "

@@ -41,25 +41,31 @@ from ...core.precision import ComputeMode
 
 def _conv_kernel(x_ref, w_ref, *refs, kh: int, kw: int,
                  stride: int, h_out: int, w_out: int, n_gi: int,
-                 out_dtype, acc_dtype, has_bias: bool, apply_relu: bool):
+                 out_dtype, acc_dtype, has_scale: bool, has_bias: bool,
+                 apply_relu: bool):
     """One grid cell: accumulate one input-channel group into the output tile.
 
     x_ref: (1, 1, H_pad, W_pad, u_in)   one batch elem, one input group
     w_ref: (1, u_out, 1, kh, kw, u_in)  weights for this (go, gi) pair
+    s_ref: (1, u_out)                   optional dequant scale (has_scale):
+                                        act_scale * per-output-channel
+                                        weight scale, int8 datapath only
     b_ref: (1, u_out)                   optional bias block (has_bias)
     o_ref: (1, 1, h_out, w_out, u_out)  revisited across the gi grid dim
     acc_ref: VMEM scratch (h_out * w_out, u_out) in acc_dtype
 
     The fused epilogue (§IV-B meets Motamedi et al.'s folded post-conv
-    computation) runs at flush time on the VMEM accumulator: bias add and
-    ReLU happen in-register in ``acc_dtype`` before the single output
-    write, so a conv+bias+ReLU group is one launch with zero extra HBM
-    traffic.
+    computation) runs at flush time on the VMEM accumulator: dequant (int8
+    datapath), bias add and ReLU happen in-register before the single
+    output write, so a conv+bias+ReLU group is one launch with zero extra
+    HBM traffic.  On the int8 datapath the operands are int8, ``acc_dtype``
+    is int32 (``preferred_element_type=jnp.int32`` keeps the MXU MACs
+    exact), and the flush rescales the int32 accumulator to float.
     """
-    if has_bias:
-        b_ref, o_ref, acc_ref = refs
-    else:
-        o_ref, acc_ref = refs
+    refs = list(refs)
+    s_ref = refs.pop(0) if has_scale else None
+    b_ref = refs.pop(0) if has_bias else None
+    o_ref, acc_ref = refs
     gi = pl.program_id(2)
 
     @pl.when(gi == 0)
@@ -88,8 +94,10 @@ def _conv_kernel(x_ref, w_ref, *refs, kh: int, kw: int,
     @pl.when(gi == n_gi - 1)
     def _flush():
         out = acc_ref[...]                          # (h_out*w_out, u_out)
+        if has_scale:
+            out = out.astype(jnp.float32) * s_ref[...]
         if has_bias:
-            out = out + b_ref[...].astype(acc_dtype)
+            out = out + b_ref[...].astype(out.dtype)
         if apply_relu:
             out = jnp.maximum(out, 0)
         o_ref[0, 0] = out.reshape(h_out, w_out, u_out).astype(out_dtype)
@@ -133,7 +141,7 @@ def conv_mapmajor(x_mm: jnp.ndarray, w_mm: jnp.ndarray,
     kernel = functools.partial(
         _conv_kernel, kh=kh, kw=kw, stride=stride, h_out=h_out, w_out=w_out,
         n_gi=n_gi, out_dtype=out_dtype, acc_dtype=acc_dtype,
-        has_bias=has_bias, apply_relu=apply_relu)
+        has_scale=False, has_bias=has_bias, apply_relu=apply_relu)
 
     in_specs = [
         pl.BlockSpec((1, 1, h_pad, w_pad, u), lambda b, go, gi: (b, gi, 0, 0, 0)),
@@ -153,5 +161,69 @@ def conv_mapmajor(x_mm: jnp.ndarray, w_mm: jnp.ndarray,
                                lambda b, go, gi: (b, go, 0, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, n_go, h_out, w_out, u_out), out_dtype),
         scratch_shapes=[pltpu.VMEM((h_out * w_out, u_out), acc_dtype)],
+        interpret=interpret,
+    )(*operands)
+
+
+def conv_mapmajor_int8(x_mm: jnp.ndarray, w_mm: jnp.ndarray,
+                       s_mm: jnp.ndarray, b_mm: jnp.ndarray = None, *,
+                       stride: int = 1, out_hw=None,
+                       apply_relu: bool = False,
+                       out_dtype=jnp.bfloat16,
+                       interpret: bool = True) -> jnp.ndarray:
+    """The true int8 datapath: int8 x int8 -> int32 MACs with a fused
+    dequant(+bias+ReLU) epilogue at flush — still exactly one Pallas launch.
+
+    x_mm: (N, Gi, H_pad, W_pad, u)   int8 map-major activations (quantized
+                                     to the layer's static per-tensor scale)
+    w_mm: (Go, u_out, Gi, Kh, Kw, u) int8 map-major weights
+    s_mm: (Go, u_out)                f32 combined dequant scale per output
+                                     channel: act_scale * weight_scale[c]
+    b_mm: (Go, u_out)                optional f32 bias, added after dequant
+
+    The accumulator is int32 VMEM scratch (``preferred_element_type=int32``
+    on every MXU dot, so MACs are exact); the flush multiplies by ``s_mm``,
+    folds bias/ReLU, and writes ``out_dtype``.
+    """
+    assert x_mm.dtype == jnp.int8, x_mm.dtype
+    assert w_mm.dtype == jnp.int8, w_mm.dtype
+    n, n_gi, h_pad, w_pad, u = x_mm.shape
+    n_go, u_out, n_gi2, kh, kw, u2 = w_mm.shape
+    assert n_gi == n_gi2 and u == u2, (x_mm.shape, w_mm.shape)
+    if out_hw is None:
+        h_out = (h_pad - kh) // stride + 1
+        w_out = (w_pad - kw) // stride + 1
+    else:
+        h_out, w_out = out_hw
+    assert h_pad >= h_out * stride + kh - 1, "pad input to out*s+k-1"
+    assert w_pad >= w_out * stride + kw - 1, "pad input to out*s+k-1"
+    assert s_mm.shape == (n_go, u_out), (s_mm.shape, (n_go, u_out))
+    has_bias = b_mm is not None
+
+    kernel = functools.partial(
+        _conv_kernel, kh=kh, kw=kw, stride=stride, h_out=h_out, w_out=w_out,
+        n_gi=n_gi, out_dtype=out_dtype, acc_dtype=jnp.int32,
+        has_scale=True, has_bias=has_bias, apply_relu=apply_relu)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, h_pad, w_pad, u), lambda b, go, gi: (b, gi, 0, 0, 0)),
+        pl.BlockSpec((1, u_out, 1, kh, kw, u), lambda b, go, gi: (go, 0, gi, 0, 0, 0)),
+        pl.BlockSpec((1, u_out), lambda b, go, gi: (go, 0)),
+    ]
+    operands = [x_mm, w_mm, s_mm.astype(jnp.float32)]
+    if has_bias:
+        assert b_mm.shape == (n_go, u_out), (b_mm.shape, (n_go, u_out))
+        in_specs.append(pl.BlockSpec((1, u_out), lambda b, go, gi: (go, 0)))
+        operands.append(b_mm.astype(jnp.float32))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(n, n_go, n_gi),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, h_out, w_out, u_out),
+                               lambda b, go, gi: (b, go, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n_go, h_out, w_out, u_out),
+                                       out_dtype),
+        scratch_shapes=[pltpu.VMEM((h_out * w_out, u_out), jnp.int32)],
         interpret=interpret,
     )(*operands)

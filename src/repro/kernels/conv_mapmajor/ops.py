@@ -20,9 +20,11 @@ from ...core.layer_ops import (add_bias, register_conv_impl,
                                register_epilogue_impl)
 from ...core.layout import LANES, from_map_major, to_map_major
 from ...core.plan import IMPL_PALLAS
-from ...core.precision import ComputeMode, resolve_weight
+from ...core.precision import (ComputeMode, QParams, QuantizedTensor,
+                               fake_quantize_act, quantize_act_int8,
+                               resolve_weight)
 from ...device.profile import DEFAULT_PROFILE
-from .conv_mapmajor import conv_mapmajor
+from .conv_mapmajor import conv_mapmajor, conv_mapmajor_int8
 from .ref import pack_weights
 
 # Per-block VMEM budget for the input block (bytes); above it we fall back.
@@ -91,6 +93,71 @@ def _conv2d_mapmajor_pallas(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
     return out
 
 
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "u",
+                                             "interpret", "fuse_bias_relu"))
+def _conv2d_mapmajor_pallas_int8(x, wq, wscale, act_scale, b=None, *,
+                                 stride: int = 1, padding: str = "SAME",
+                                 u: int = LANES, interpret: bool = True,
+                                 fuse_bias_relu: bool = False) -> jnp.ndarray:
+    """True int8 dispatch: quantize activations at the calibrated static
+    scale, launch the int8 x int8 -> int32 kernel, dequant at flush.
+
+    ``wq`` is the prepared int8 weight payload (OIHW), ``wscale`` its
+    per-output-channel f32 scales, ``act_scale`` the layer's per-tensor
+    activation scale (a traced f32 scalar — calibration never retraces).
+    The zero padding added for SAME/halo is exact under symmetric
+    quantization (zero_point = 0 maps to int8 zero), so it is applied
+    after quantization at no accuracy cost.
+    """
+    n, cin, h, wdim = x.shape
+    cout, _, kh, kw = wq.shape
+    h_out, ph0, ph1 = _pad_amounts(h, kh, stride, padding)
+    w_out, pw0, pw1 = _pad_amounts(wdim, kw, stride, padding)
+    xq = quantize_act_int8(x, act_scale)
+    xp = jnp.pad(xq, ((0, 0), (0, 0), (ph0, ph1), (pw0, pw1)))
+
+    x_mm = to_map_major(xp, u, channel_axis=1)
+    w_mm = pack_weights(wq, u)
+    # Combined dequant scale per output channel, packed (Go, u) like bias;
+    # lane-padded channels get scale 0 and are sliced away below.
+    s_mm = _pack_bias(wscale.reshape(-1) * act_scale, cout, u)
+    b_mm = _pack_bias(b, cout, u) if b is not None else None
+
+    out_mm = conv_mapmajor_int8(x_mm, w_mm, s_mm, b_mm, stride=stride,
+                                out_hw=(h_out, w_out),
+                                apply_relu=fuse_bias_relu,
+                                interpret=interpret)
+    return from_map_major(out_mm, cout, channel_axis=1)
+
+
+def conv2d_mapmajor_int8(x: jnp.ndarray, w: QuantizedTensor, qp: QParams,
+                         b=None, *, stride: int = 1, padding: str = "SAME",
+                         u: int = LANES, interpret: bool = True,
+                         vmem_budget: Optional[int] = None,
+                         fuse_bias_relu: bool = False) -> jnp.ndarray:
+    """NCHW int8-datapath conv: int8 operands, int32 accumulation, fused
+    dequant(+bias+ReLU) epilogue — one Pallas launch.
+
+    Same VMEM envelope policy as :func:`conv2d_mapmajor` (the bf16 bound is
+    used, which is conservative for 1-byte blocks); the over-budget
+    fallback runs fused XLA with *fake-quantized* activations and
+    dequantized weights so its numerics track the kernel path's rounding.
+    """
+    _, _, h, wdim = x.shape
+    _, _, kh, _ = w.q.shape
+    if not fits_vmem(h, wdim, kh, stride, padding, u,
+                     ComputeMode.IMPRECISE_INT8, budget=vmem_budget):
+        xdq = fake_quantize_act(x, qp.act_scale)
+        return _conv2d_xla_fallback(
+            xdq, w.dequantize(jnp.bfloat16), b, stride=stride,
+            padding=padding, mode=ComputeMode.IMPRECISE_INT8,
+            relu=fuse_bias_relu)
+    return _conv2d_mapmajor_pallas_int8(
+        x, w.q, w.scale, jnp.float32(qp.act_scale), b, stride=stride,
+        padding=padding, u=u, interpret=interpret,
+        fuse_bias_relu=fuse_bias_relu)
+
+
 def conv2d_mapmajor(x: jnp.ndarray, w: jnp.ndarray, b=None, *,
                     stride: int = 1, padding: str = "SAME",
                     mode: ComputeMode = ComputeMode.RELAXED,
@@ -154,15 +221,34 @@ def fits_vmem(h: int, w: int, k: int, stride: int, padding: str, u: int,
         <= budget
 
 
+def _int8_dispatchable(plan, w) -> bool:
+    """True when the true int8 datapath can run: int8 mode, prepared int8
+    weights with per-*output*-channel scales, and calibrated activation
+    qparams on the plan.  Anything else falls back to the dequant path."""
+    return (plan.mode is ComputeMode.IMPRECISE_INT8
+            and isinstance(w, QuantizedTensor)
+            and plan.qparams is not None
+            and w.scale.size == w.q.shape[0])
+
+
 @register_conv_impl(IMPL_PALLAS)
 def _conv_pallas_planned(layer, plan, params, x):
     """Registry adapter: planned map-major conv (weights resolved per mode).
 
     Compiles the kernel on TPU; anywhere else Pallas TPU kernels only run
-    interpreted (the planner routes here off-TPU only when forced).
+    interpreted (the planner routes here off-TPU only when forced).  An
+    IMPRECISE_INT8 plan carrying calibrated qparams takes the true int8
+    datapath (int8 MACs, int32 accumulation, in-kernel dequant+bias).
     """
+    b = params.get("b") if layer.use_bias else None
+    if _int8_dispatchable(plan, params["w"]):
+        return conv2d_mapmajor_int8(x, params["w"], plan.qparams, b,
+                                    stride=layer.stride,
+                                    padding=layer.padding, u=plan.u,
+                                    interpret=jax.default_backend() != "tpu",
+                                    vmem_budget=plan.vmem_budget)
     w = resolve_weight(params["w"], plan.mode)
-    return conv2d_mapmajor(x, w, params.get("b") if layer.use_bias else None,
+    return conv2d_mapmajor(x, w, b,
                            stride=layer.stride, padding=layer.padding,
                            mode=plan.mode, u=plan.u,
                            interpret=jax.default_backend() != "tpu",
@@ -176,10 +262,20 @@ def _conv_pallas_fused(layer, plan, params, x, epilogue):
     ``epilogue`` is guaranteed kernel-fusible by the graph pass
     (``KERNEL_EPILOGUE_KINDS``, i.e. ReLU only) — the kernel applies it to
     the VMEM accumulator at flush time, so the fused group costs no extra
-    HBM round-trip and no extra launch.
+    HBM round-trip and no extra launch.  Under IMPRECISE_INT8 with
+    calibrated qparams the same single launch runs int8 x int8 -> int32
+    with the dequant folded into the flush epilogue, before bias+ReLU.
     """
+    b = params.get("b") if layer.use_bias else None
+    if _int8_dispatchable(plan, params["w"]):
+        return conv2d_mapmajor_int8(x, params["w"], plan.qparams, b,
+                                    stride=layer.stride,
+                                    padding=layer.padding, u=plan.u,
+                                    interpret=jax.default_backend() != "tpu",
+                                    vmem_budget=plan.vmem_budget,
+                                    fuse_bias_relu=True)
     w = resolve_weight(params["w"], plan.mode)
-    return conv2d_mapmajor(x, w, params.get("b") if layer.use_bias else None,
+    return conv2d_mapmajor(x, w, b,
                            stride=layer.stride, padding=layer.padding,
                            mode=plan.mode, u=plan.u,
                            interpret=jax.default_backend() != "tpu",

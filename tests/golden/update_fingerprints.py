@@ -33,8 +33,8 @@ def compute_fingerprints() -> dict:
     must never share a fingerprint (the ProgramCache relies on it).
     """
     from repro.cnn import alexnet, googlenet, squeezenet
-    from repro.core import (ComputeMode, PlannerConfig, lower_network,
-                            plan_network)
+    from repro.core import (ComputeMode, PlannerConfig, QParams,
+                            lower_network, plan_network)
     from repro.device import TPU_V4
 
     nets = {
@@ -47,6 +47,14 @@ def compute_fingerprints() -> dict:
     out = {}
     for name, net in nets.items():
         relaxed = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
+        int8 = {n: ComputeMode.IMPRECISE_INT8
+                for n in net.inexactable_layers}
+        # A fixed, synthetic calibration: qparams are part of the plan's
+        # dispatch identity, so the quantized-with-scales case must pin a
+        # deterministic scale per layer (a real calibration would tie the
+        # golden file to weights + data).
+        qcal = {n: QParams(act_scale=round(0.01 + 0.001 * i, 6))
+                for i, n in enumerate(sorted(net.inexactable_layers))}
         graph = lower_network(net)
         for allow_pallas in (False, True):
             cfg = PlannerConfig(allow_pallas=allow_pallas)
@@ -60,6 +68,18 @@ def compute_fingerprints() -> dict:
             out[f"{name}.{tag}.all_relaxed.fused"] = \
                 plan_network(net, modes=relaxed, config=cfg,
                              graph=graph).fingerprint()
+        # int8 cases: weight-only quantization (no qparams — the dequant
+        # fallback) and the calibrated true datapath.  The qcal fingerprint
+        # must differ from the uncalibrated one — activation scales are
+        # dispatch content (the kernels bake them into the launch), so a
+        # quantized and a float program can never alias in the
+        # ProgramCache.
+        cfg = PlannerConfig(allow_pallas=True)
+        out[f"{name}.pallas.all_int8"] = \
+            plan_network(net, modes=int8, config=cfg).fingerprint()
+        out[f"{name}.pallas.all_int8.qcal"] = \
+            plan_network(net, modes=int8,
+                         config=cfg).with_qparams(qcal).fingerprint()
         v4 = PlannerConfig(profile=TPU_V4, allow_pallas=True)
         out[f"{name}.pallas.tpu_v4.all_relaxed"] = \
             plan_network(net, modes=relaxed, config=v4).fingerprint()

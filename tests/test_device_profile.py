@@ -112,9 +112,25 @@ def test_calibration_preserves_base_structure_fields():
     assert cal.vmem_budget == CPU_INTERPRET.vmem_budget
     assert cal.lane_width == CPU_INTERPRET.lane_width
     assert cal.supports_pallas == CPU_INTERPRET.supports_pallas
-    # int8 peak scales from measured bf16 by the base datasheet ratio
-    ratio = CPU_INTERPRET.peak_flops_int8 / CPU_INTERPRET.peak_flops_bf16
-    assert cal.peak_flops_int8 == pytest.approx(cal.peak_flops_bf16 * ratio)
+
+
+def test_calibration_measures_int8_peak():
+    """int8 peak comes from its own int8 x int8 -> int32 sweep, not the base
+    profile's datasheet ratio: under the stubbed 1ms window the measured
+    rate is exactly work/tick, same as bf16's."""
+    cal = calibrate(CPU_INTERPRET, clock=StubClock(), **SMALL)
+    assert cal.peak_flops_int8 == pytest.approx(2.0 * 32 ** 3 / 1e-3)
+    again = calibrate(CPU_INTERPRET, clock=StubClock(), **SMALL)
+    assert again.peak_flops_int8 == cal.peak_flops_int8  # deterministic
+
+
+def test_measure_matmul_flops_int8_dtype_runs():
+    """The int8 sweep path (randint data, int32 accumulator) measures a
+    positive rate under a stubbed clock."""
+    from repro.device.calibrate import measure_matmul_flops
+    rate = measure_matmul_flops(jnp.int8, sizes=(32,), reps=2,
+                                clock=StubClock())
+    assert rate == pytest.approx(2.0 * 32 ** 3 / 1e-3)
 
 
 # ------------------------------------------------------ profile cache ------

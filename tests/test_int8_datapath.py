@@ -1,0 +1,258 @@
+"""End-to-end tests for the true int8 datapath (ISSUE 6 tentpole).
+
+Pins the four load-bearing claims:
+
+  * a fused conv+bias+ReLU group under IMPRECISE_INT8 executes as **one**
+    launch through the ``register_epilogue_impl`` hook, with int8 weight
+    payloads and calibrated qparams reaching the kernel (hook-spy);
+  * the kernel accumulates in **int32** — bit-exact against an integer
+    reference, not merely within a float tolerance;
+  * the planner costs IMPRECISE_INT8 groups against the **int8 ridge**
+    (``profile.ridge("int8")``), not the bf16 ridge;
+  * ``synthesize`` calibrates activation scales over the calibration set,
+    attaches them to exactly the INT8-mode layers, records them in the
+    ``SynthesisReport``, and clears them on demotion.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+jax.config.update("jax_platform_name", "cpu")
+
+from repro.cnn import alexnet, init_network_params
+from repro.core import (ComputeMode, DispatchStats, IMPL_PALLAS,
+                        NetworkDescription, PlannerConfig, QParams,
+                        QuantizedTensor, execute_graph, lower_network,
+                        mode_tolerance, plan_network, quantize_int8,
+                        synthesize)
+from repro.core.layer_ops import EPILOGUE_IMPLS
+from repro.core.planner import dense_cost, mode_cost_dtype
+from repro.core.synthesizer import (_attach_qparams,
+                                    calibrate_activation_qparams)
+from repro.device import TPU_V4, TPU_V5E
+from repro.kernels.conv_mapmajor import ops as conv_ops
+from repro.kernels.conv_mapmajor.conv_mapmajor import conv_mapmajor_int8
+from repro.kernels.conv_mapmajor.ref import pack_weights
+from repro.core.layout import to_map_major
+
+
+def _tiny_net():
+    net = NetworkDescription("tiny_int8", (3, 13, 13))
+    net.conv("c1", 9, 3, inputs=("input",))
+    net.relu("r1")
+    net.flatten("flat")
+    net.dense("fc", 5)
+    return net
+
+
+# ------------------------------------------------------ hook-spy: 1 launch --
+def test_quantized_fused_conv_group_is_one_launch_through_hook():
+    """The fused conv+bias+ReLU group under IMPRECISE_INT8 dispatches once,
+    through the conv Pallas epilogue hook, and the int8 kernel wrapper sees
+    int8 weight payloads plus the plan's calibrated qparams."""
+    net = _tiny_net()
+    graph = lower_network(net)
+    params = init_network_params(net, jax.random.PRNGKey(3))
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 3, 13, 13))
+
+    int8 = {n: ComputeMode.IMPRECISE_INT8 for n in net.inexactable_layers}
+    qparams = calibrate_activation_qparams(net, params, x)
+    plan = _attach_qparams(
+        plan_network(net, modes=int8,
+                     config=PlannerConfig(allow_pallas=True), graph=graph),
+        qparams)
+    # Force the conv group onto the Pallas impl regardless of this host's
+    # cost-model routing — the claim under test is the hook path itself.
+    import dataclasses
+    plan = plan.with_layer("c1", dataclasses.replace(
+        plan.for_layer("c1"), impl=IMPL_PALLAS, u=8,
+        qparams=qparams["c1"]))
+
+    prepared = {"c1": {"w": quantize_int8(params["c1"]["w"], channel_axis=0),
+                       "b": params["c1"]["b"].astype(jnp.float32)},
+                "fc": dict(params["fc"])}
+
+    hook_calls = []
+    kernel_calls = []
+    original_hook = EPILOGUE_IMPLS[("conv", IMPL_PALLAS)]
+    original_kernel = conv_ops.conv2d_mapmajor_int8
+
+    def spy_hook(layer, lplan, lparams, xx, epilogue):
+        hook_calls.append((layer.name, lplan.mode, lplan.qparams))
+        return original_hook(layer, lplan, lparams, xx, epilogue)
+
+    def spy_kernel(xx, w, qp, b=None, **kw):
+        assert isinstance(w, QuantizedTensor) and w.q.dtype == jnp.int8
+        assert isinstance(qp, QParams) and qp.act_scale > 0
+        kernel_calls.append(kw)
+        return original_kernel(xx, w, qp, b, **kw)
+
+    EPILOGUE_IMPLS[("conv", IMPL_PALLAS)] = spy_hook
+    conv_ops.conv2d_mapmajor_int8 = spy_kernel
+    try:
+        stats = DispatchStats()
+        execute_graph(graph, plan, prepared, x, stats=stats)
+    finally:
+        EPILOGUE_IMPLS[("conv", IMPL_PALLAS)] = original_hook
+        conv_ops.conv2d_mapmajor_int8 = original_kernel
+
+    # conv + relu fused away: the whole group went through the hook once,
+    # and the hook made exactly one int8 kernel call (one Pallas launch,
+    # fuse_bias_relu folds bias+ReLU into the flush epilogue).
+    assert [c[0] for c in hook_calls] == ["c1"]
+    assert hook_calls[0][1] is ComputeMode.IMPRECISE_INT8
+    assert hook_calls[0][2] == qparams["c1"]
+    assert len(kernel_calls) == 1
+    assert kernel_calls[0].get("fuse_bias_relu") is True
+    # dispatch accounting: one op for the fused conv group (2 layers)
+    assert stats.fused_groups >= 1 and stats.fused_away >= 1
+
+
+# ------------------------------------------------- int32 accumulation exact --
+def test_conv_kernel_accumulates_in_int32_bit_exact():
+    """With combined dequant scale 1.0 and f32 output, the kernel's int32
+    accumulation is bit-exact against an integer reference — sums run to
+    ~600k, far beyond bf16's 8-bit mantissa, so a float accumulator could
+    not pass this."""
+    rng = np.random.default_rng(7)
+    n, cin, h, cout, k, u = 1, 4, 8, 8, 3, 8
+    x = jnp.asarray(rng.integers(-127, 128, size=(n, cin, h, h)), jnp.int8)
+    w = jnp.asarray(rng.integers(-127, 128, size=(cout, cin, k, k)),
+                    jnp.int8)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    x_mm = to_map_major(xp, u, channel_axis=1)
+    w_mm = pack_weights(w, u)
+    s_mm = jnp.ones((-(-cout // u), u), jnp.float32)
+    got = conv_mapmajor_int8(x_mm, w_mm, s_mm, out_hw=(h, h),
+                             out_dtype=jnp.float32)
+
+    # f32 conv over integer values is exact below 2^24; sums here stay
+    # under cin*k*k*127^2 ~ 580k.
+    ref = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32), (1, 1), "SAME")
+    from repro.core.layout import from_map_major
+    out = from_map_major(got, cout, channel_axis=1)
+    assert np.array_equal(np.asarray(out, np.int64),
+                          np.asarray(ref, np.int64))
+
+
+# ------------------------------------------------------- planner int8 ridge --
+def test_planner_costs_int8_groups_against_int8_ridge():
+    """IMPRECISE_INT8 plans cost against profile.ridge("int8").  On tpu_v5e
+    the int8 peak is 2x bf16, so the int8 ridge doubles; the rule-3 reason
+    strings must name the int8 ridge, with the right value."""
+    assert mode_cost_dtype(ComputeMode.IMPRECISE_INT8) == "int8"
+    assert mode_cost_dtype(ComputeMode.RELAXED) == "bf16"
+    assert TPU_V5E.ridge("int8") == pytest.approx(2 * TPU_V5E.ridge("bf16"))
+
+    net = alexnet(scale=0.1, num_classes=10, input_hw=67)
+    cfg = PlannerConfig(profile=TPU_V5E, allow_pallas=True)
+    int8 = {n: ComputeMode.IMPRECISE_INT8 for n in net.inexactable_layers}
+    relaxed = {n: ComputeMode.RELAXED for n in net.inexactable_layers}
+    p_int8 = plan_network(net, modes=int8, config=cfg)
+    p_rel = plan_network(net, modes=relaxed, config=cfg)
+
+    int8_reasons = [p_int8.for_layer(n).reason for n in net.inexactable_layers
+                    if "ridge" in p_int8.for_layer(n).reason]
+    rel_reasons = [p_rel.for_layer(n).reason for n in net.inexactable_layers
+                   if "ridge" in p_rel.for_layer(n).reason]
+    assert int8_reasons and all("int8 ridge" in r for r in int8_reasons)
+    assert rel_reasons and all("bf16 ridge" in r for r in rel_reasons)
+    assert all(f"{TPU_V5E.ridge('int8'):.0f}" in r for r in int8_reasons)
+
+
+def test_int8_cost_uses_int8_peak_and_byte_width():
+    """LayerCost with dtype="int8" divides by the int8 peak (half the
+    compute seconds on v5e) and int8 plans move half the bytes (1 B/el)."""
+    c_bf16 = dense_cost(512, 512, 32, profile=TPU_V5E, dtype="bf16")
+    c_int8 = dense_cost(512, 512, 32, bytes_per_el=1,
+                        profile=TPU_V5E, dtype="int8")
+    assert c_int8.flops == c_bf16.flops
+    assert c_int8.compute_seconds == pytest.approx(
+        c_bf16.compute_seconds / 2)
+    assert c_int8.bytes == pytest.approx(c_bf16.bytes / 2)
+    assert c_int8.arithmetic_intensity == pytest.approx(
+        2 * c_bf16.arithmetic_intensity)
+
+    # On tpu_v4 the int8 peak equals bf16 peak: the ridge is unchanged but
+    # AI doubles, so int8 routing can only move layers toward Pallas.
+    assert TPU_V4.ridge("int8") == TPU_V4.ridge("bf16")
+
+
+# ----------------------------------------------------- synthesize-level ----
+def test_forced_int8_synthesis_calibrates_and_attaches_qparams():
+    net = _tiny_net()
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 13, 13))
+
+    prog = synthesize(net, params, forced_mode=ComputeMode.IMPRECISE_INT8,
+                      autotune_input=x)
+    for l in net.param_layers:
+        lp = prog.plan.for_layer(l.name)
+        assert lp.mode is ComputeMode.IMPRECISE_INT8
+        assert lp.qparams is not None and lp.qparams.act_scale > 0
+        assert isinstance(prog.prepared[l.name]["w"], QuantizedTensor)
+    assert set(prog.synthesis_report.act_scales) == \
+        {l.name for l in net.param_layers}
+
+    # parity against the PRECISE program, within the INT8 tolerance
+    ref = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
+    want = np.asarray(ref.infer(x), np.float32)
+    got = np.asarray(prog.infer(x), np.float32)
+    tol = mode_tolerance(ComputeMode.IMPRECISE_INT8) \
+        * max(np.abs(want).max(), 1.0)
+    assert np.max(np.abs(got - want)) <= tol
+
+
+def test_forced_int8_without_calibration_images_keeps_fallback():
+    """No validation set and no autotune_input: nothing to calibrate on, so
+    layers quantize weights but carry no qparams (dequant fallback)."""
+    net = _tiny_net()
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    prog = synthesize(net, params, forced_mode=ComputeMode.IMPRECISE_INT8)
+    for l in net.param_layers:
+        assert prog.plan.for_layer(l.name).qparams is None
+    assert prog.synthesis_report.act_scales == {}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 13, 13))
+    prog.infer(x)                                    # still executes
+
+
+def test_attach_qparams_sets_only_int8_layers_and_demotion_clears():
+    net = _tiny_net()
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 13, 13))
+    qparams = calibrate_activation_qparams(net, params, x)
+    assert set(qparams) == {l.name for l in net.param_layers}
+
+    mixed = plan_network(net, modes={
+        "c1": ComputeMode.IMPRECISE_INT8, "fc": ComputeMode.RELAXED})
+    attached = _attach_qparams(mixed, qparams)
+    assert attached.for_layer("c1").qparams == qparams["c1"]
+    assert attached.for_layer("fc").qparams is None
+
+    # demotion: re-attaching after the mode moved off INT8 clears qparams
+    demoted = attached.with_modes({"c1": ComputeMode.IMPRECISE})
+    assert _attach_qparams(demoted, qparams).for_layer("c1").qparams is None
+
+
+def test_allow_int8_loop_ships_calibrated_plan():
+    """The fixed-point loop with allow_int8: whatever layers ship INT8 must
+    carry qparams, and the report's act_scales cover exactly those."""
+    net = _tiny_net()
+    params = init_network_params(net, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 3, 13, 13))
+    y = jnp.asarray(np.random.default_rng(0).integers(0, 5, size=(4,)))
+
+    prog = synthesize(net, params, (x, y), allow_int8=True,
+                      max_degradation=1.0)
+    int8_layers = {n for n, m in prog.modes.items()
+                   if m is ComputeMode.IMPRECISE_INT8}
+    for l in net.param_layers:
+        lp = prog.plan.for_layer(l.name)
+        if l.name in int8_layers:
+            assert lp.qparams is not None
+        else:
+            assert lp.qparams is None
+    assert set(prog.synthesis_report.act_scales) == int8_layers
+    prog.infer(x)

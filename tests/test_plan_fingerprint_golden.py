@@ -81,6 +81,46 @@ def test_golden_covers_fused_cases_with_distinct_fingerprints():
             f"digest is no longer part of plan identity")
 
 
+def test_golden_covers_int8_cases_with_distinct_fingerprints():
+    """The golden set pins quantized-program identity.  Three aliases must
+    be impossible: int8 vs. relaxed (mode is dispatch content), calibrated
+    int8 vs. uncalibrated int8 (activation scales are baked into the
+    launch), and — transitively — calibrated int8 vs. any float program.
+    A shared value would let the ProgramCache serve a float executable for
+    a quantized plan."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)
+    int8_cases = {n for n in golden if n.endswith(".all_int8")}
+    assert int8_cases, f"no int8 cases in the golden set; {UPDATE_HINT}"
+    for case in int8_cases:
+        relaxed = case.replace(".all_int8", ".all_relaxed")
+        qcal = case + ".qcal"
+        assert relaxed in golden and qcal in golden, (case, UPDATE_HINT)
+        assert golden[case] != golden[relaxed], (
+            f"{case} shares a fingerprint with {relaxed} — the compute mode "
+            f"is no longer part of plan identity")
+        assert golden[qcal] != golden[case], (
+            f"{qcal} shares a fingerprint with {case} — activation qparams "
+            f"are no longer part of plan identity")
+        assert golden[qcal] != golden[relaxed]
+
+
+def test_fingerprint_distinct_int8_qparams_live():
+    """Live qparams identity: attaching calibration scales moves the
+    fingerprint, and two different scales never alias."""
+    from repro.cnn import squeezenet
+    from repro.core import ComputeMode, QParams, plan_network
+
+    net = squeezenet(scale=0.08, num_classes=10, input_hw=64)
+    int8 = {n: ComputeMode.IMPRECISE_INT8 for n in net.inexactable_layers}
+    plan = plan_network(net, modes=int8)
+    first = sorted(net.inexactable_layers)[0]
+    a = plan.with_qparams({first: QParams(act_scale=0.02)})
+    b = plan.with_qparams({first: QParams(act_scale=0.04)})
+    assert plan.fingerprint() != a.fingerprint()
+    assert a.fingerprint() != b.fingerprint()
+
+
 def test_fingerprint_distinct_across_devices_live():
     """Same check, computed live (not just pinned in the file)."""
     from repro.cnn import squeezenet

@@ -1,0 +1,158 @@
+"""Property-based suite for the int8 quantization layer (core/precision.py).
+
+Three families of properties back the true int8 datapath:
+
+  * quantization round-trip error bounds — symmetric per-tensor activation
+    quantization and per-channel weight quantization both bound the
+    per-element reconstruction error by scale/2 (plus the clip, which the
+    amax-derived scale makes unreachable);
+  * scale positivity/shape invariants — every per-channel scale is strictly
+    positive even for all-zero channels (the kernels divide by it);
+  * kernel parity — the int8 conv and matmul kernels match the float XLA
+    reference within ``mode_tolerance(IMPRECISE_INT8)``.
+
+Runs under the real ``hypothesis`` package when installed and under the
+deterministic stub in conftest.py otherwise.  Marked ``property`` for the
+CI matrix (``-m property`` / ``-m "not property"``).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.precision import (ComputeMode, QParams, calibrate_act_scale,
+                                  fake_quantize_act, mode_tolerance,
+                                  quantize_act_int8, quantize_int8,
+                                  weight_channel_axis)
+from repro.kernels.conv_mapmajor.ops import conv2d_mapmajor_int8
+from repro.kernels.matmul_mapmajor.ops import matmul_int8
+
+jax.config.update("jax_platform_name", "cpu")
+
+pytestmark = pytest.mark.property
+
+INT8_TOL = mode_tolerance(ComputeMode.IMPRECISE_INT8)
+
+
+def _tensor(shape, salt, scale=1.0):
+    seed = (sum(d * p for d, p in zip(shape, (73, 71, 67, 61))) + salt) \
+        % (2**31)
+    return (jax.random.normal(jax.random.PRNGKey(seed), shape)
+            * scale).astype(jnp.float32)
+
+
+# ------------------------------------------------ round-trip error bounds --
+@given(n=st.integers(1, 64), salt=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_activation_roundtrip_error_bounded_by_half_scale(n, salt):
+    x = _tensor((n,), salt, scale=3.0)
+    qp = calibrate_act_scale(x)
+    back = np.asarray(quantize_act_int8(x, qp.act_scale), np.float32) \
+        * qp.act_scale
+    err = np.abs(back - np.asarray(x, np.float32))
+    # amax/127 scale means no element clips; rounding error <= scale/2
+    assert err.max() <= qp.act_scale / 2 + 1e-6
+
+
+@given(n=st.integers(1, 64), salt=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_fake_quantize_matches_quantize_dequantize(n, salt):
+    x = _tensor((n,), salt, scale=2.0)
+    qp = calibrate_act_scale(x)
+    via_int8 = np.asarray(quantize_act_int8(x, qp.act_scale), np.float32) \
+        * qp.act_scale
+    via_fake = np.asarray(fake_quantize_act(x, qp.act_scale), np.float32)
+    np.testing.assert_allclose(via_fake, via_int8, atol=1e-6)
+
+
+@given(cout=st.integers(1, 8), cin=st.integers(1, 6),
+       k=st.sampled_from([1, 3]), salt=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_weight_roundtrip_error_bounded_per_channel(cout, cin, k, salt):
+    w = _tensor((cout, cin, k, k), salt)
+    qt = quantize_int8(w, channel_axis=0)
+    scale = np.asarray(qt.scale, np.float32)          # (cout, 1, 1, 1)
+    back = np.asarray(qt.q, np.float32) * scale
+    err = np.abs(back - np.asarray(w, np.float32))
+    # each channel's error is bounded by that channel's scale/2
+    bound = np.broadcast_to(scale / 2, err.shape)
+    assert np.all(err <= bound + 1e-6)
+
+
+# ------------------------------------------------------- scale invariants --
+@given(cout=st.integers(1, 8), cin=st.integers(1, 6),
+       zero_channel=st.booleans(), salt=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_per_channel_scales_strictly_positive(cout, cin, zero_channel, salt):
+    w = np.array(_tensor((cout, cin, 3, 3), salt))
+    if zero_channel:
+        w[0] = 0.0                   # an all-zero channel must not yield 0
+    qt = quantize_int8(jnp.asarray(w), channel_axis=0)
+    assert np.all(np.asarray(qt.scale) > 0)
+    assert qt.scale.size == cout
+
+
+@given(k=st.integers(1, 16), n=st.integers(1, 16), salt=st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_dense_channel_axis_gives_per_column_scales(k, n, salt):
+    w = _tensor((k, n), salt)
+    qt = quantize_int8(w, channel_axis=weight_channel_axis("dense"))
+    assert qt.scale.shape == (1, n)
+    assert np.all(np.asarray(qt.scale) > 0)
+
+
+@given(scale=st.sampled_from([1e-6, 0.01, 1.0, 117.0]))
+@settings(max_examples=10, deadline=None)
+def test_qparams_accepts_positive_rejects_nonpositive(scale):
+    assert QParams(act_scale=scale).act_scale == scale
+    with pytest.raises(ValueError):
+        QParams(act_scale=-scale)
+    with pytest.raises(ValueError):
+        QParams(act_scale=0.0)
+
+
+# ----------------------------------------------------------- kernel parity --
+@given(h=st.integers(4, 10), cin=st.integers(1, 5), cout=st.integers(1, 6),
+       k=st.sampled_from([1, 3]), stride=st.sampled_from([1, 2]),
+       relu=st.booleans(), salt=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_int8_conv_kernel_matches_float_reference(h, cin, cout, k, stride,
+                                                  relu, salt):
+    x = _tensor((2, cin, h, h), salt)
+    w = _tensor((cout, cin, k, k), salt + 1, scale=0.3)
+    b = _tensor((cout,), salt + 2)
+    qt = quantize_int8(w, channel_axis=0)
+    qp = calibrate_act_scale(x)
+    got = conv2d_mapmajor_int8(x, qt, qp, b, stride=stride, padding="SAME",
+                               u=8, fuse_bias_relu=relu)
+    ref = jax.lax.conv_general_dilated(x, w, (stride, stride), "SAME") \
+        + b.reshape(1, -1, 1, 1)
+    if relu:
+        ref = jnp.maximum(ref, 0)
+    got = np.asarray(got, np.float32)
+    ref = np.asarray(ref, np.float32)
+    np.testing.assert_allclose(got, ref, rtol=INT8_TOL,
+                               atol=INT8_TOL * max(np.abs(ref).max(), 1.0))
+
+
+@given(m=st.integers(1, 8), kdim=st.integers(1, 48), n=st.integers(1, 24),
+       relu=st.booleans(), use_bias=st.booleans(), salt=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_int8_matmul_kernel_matches_float_reference(m, kdim, n, relu,
+                                                    use_bias, salt):
+    a = _tensor((m, kdim), salt)
+    w = _tensor((kdim, n), salt + 1, scale=0.3)
+    b = _tensor((n,), salt + 2) if use_bias else None
+    qt = quantize_int8(w, channel_axis=weight_channel_axis("dense"))
+    qp = calibrate_act_scale(a)
+    got = matmul_int8(a, qt, qp, b, relu=relu)
+    ref = a @ w
+    if b is not None:
+        ref = ref + b
+    if relu:
+        ref = jnp.maximum(ref, 0)
+    got = np.asarray(got, np.float32)
+    ref = np.asarray(ref, np.float32)
+    np.testing.assert_allclose(got, ref, rtol=INT8_TOL,
+                               atol=INT8_TOL * max(np.abs(ref).max(), 1.0))
