@@ -28,7 +28,9 @@ SCHEMA_VERSION = 1
 #: Headline metrics each known suite must emit (others may add freely).
 REQUIRED_METRICS: Dict[str, List[str]] = {
     "serving_throughput": ["sustained_imgs_per_s", "latency_p50_ms",
-                           "latency_p95_ms"],
+                           "latency_p95_ms", "latency_p99_ms",
+                           "replica_count", "scaling_efficiency",
+                           "shed_requests", "warm_seconds_total"],
     "table3_vs_klp_flp": ["olp_over_flp_speedup"],
     "device_sweep": ["profiles", "divergent_layers", "distinct_fingerprints"],
     "fusion_speedup": ["googlenet_dispatches_unfused",

@@ -1,0 +1,34 @@
+"""Cappuccino reproduction: inference software synthesis in JAX/Pallas.
+
+The supported public surface is exactly ``__all__`` — the subpackages a
+user composes the pipeline from:
+
+- ``repro.core``     synthesis: plans, planner, graph passes, modes,
+                     ``synthesize()``;
+- ``repro.cnn``      the paper's CNN workloads (AlexNet, GoogLeNet,
+                     SqueezeNet) as ``NetworkDescription``\\ s;
+- ``repro.device``   frozen ``DeviceProfile``\\ s + calibration;
+- ``repro.kernels``  the map-major Pallas conv/matmul kernels;
+- ``repro.serving``  the serving tier: batching, program cache, the
+                     data-parallel ``ReplicaSet`` (DESIGN.md §6/§11).
+
+Subpackages are imported lazily so ``import repro`` stays cheap — nothing
+JAX-heavy runs until a subpackage is touched.  Anything not reachable
+from these names (``repro.nn``, ``repro.launch`` internals, ...) is
+implementation detail and may change without deprecation.
+"""
+from __future__ import annotations
+
+import importlib
+
+__all__ = ["cnn", "core", "device", "kernels", "serving"]
+
+
+def __getattr__(name: str):
+    if name in __all__:
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

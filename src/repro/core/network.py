@@ -11,15 +11,12 @@ first-class feature because GoogLeNet and SqueezeNet are DAGs, not chains.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
-from .layout import LANES
 from .precision import ComputeMode
-from .parallelism import Parallelism
 
 
 @dataclass(frozen=True)
@@ -124,29 +121,16 @@ class NetworkDescription:
 # this executor defines the semantics every implementation shares.
 # ---------------------------------------------------------------------------
 
-def _resolve_plan(net: NetworkDescription, plan, modes, parallelism,
-                  backend, mapmajor_u):
-    """Build the effective ExecutionPlan from either a real plan or the
-    deprecated global (backend, parallelism) flag pair."""
+def _resolve_plan(net: NetworkDescription, plan, modes):
+    """The effective ExecutionPlan: the supplied one (with the mode overlay
+    applied) or a default uniform plan.  The PR-1 ``backend=``/
+    ``parallelism=``/``mapmajor_u=`` flag shims are gone (PR 7) — build a
+    plan with ``ExecutionPlan.uniform`` or ``plan_network`` instead."""
     from .plan import ExecutionPlan
 
     if plan is not None:
-        if backend is not None or parallelism is not None \
-                or mapmajor_u is not None:
-            raise ValueError("pass either plan= or the deprecated backend=/"
-                             "parallelism=/mapmajor_u= flags, not both")
         return plan.with_modes(modes) if modes else plan
-
-    if backend is not None or parallelism is not None:
-        warnings.warn(
-            "run_network(backend=..., parallelism=...) is deprecated; pass "
-            "plan=ExecutionPlan (e.g. from repro.core.planner.plan_network) "
-            "instead", DeprecationWarning, stacklevel=3)
-    return ExecutionPlan.uniform(net, backend=backend or "xla",
-                                 parallelism=parallelism or Parallelism.OLP,
-                                 modes=modes,
-                                 u=mapmajor_u if mapmajor_u is not None
-                                 else LANES)
+    return ExecutionPlan.uniform(net, modes=modes)
 
 
 def _execute(net: NetworkDescription, params, x, plan) -> Dict[str, jnp.ndarray]:
@@ -176,23 +160,18 @@ def _execute(net: NetworkDescription, params, x, plan) -> Dict[str, jnp.ndarray]
 def run_network(net: NetworkDescription, params: Dict[str, Dict[str, jnp.ndarray]],
                 x: jnp.ndarray, *,
                 modes: Optional[Dict[str, ComputeMode]] = None,
-                plan=None,
-                parallelism: Optional[Parallelism] = None,
-                backend: Optional[str] = None,
-                mapmajor_u: Optional[int] = None) -> jnp.ndarray:
+                plan=None) -> jnp.ndarray:
     """Evaluate the DAG under an :class:`~repro.core.plan.ExecutionPlan`.
 
     ``plan`` gives each layer its implementation / thread policy / compute
     mode / channel-group width; ``modes`` (layer name -> ComputeMode)
     overlays the plan's modes — structural layers run in f32 regardless.
-
-    ``backend=`` / ``parallelism=`` are the deprecated global flags; they
-    lower to a uniform plan via ``ExecutionPlan.uniform`` with the historic
-    dispatch semantics ("xla" = lax convs / OLP codegen, "pallas" =
-    map-major Pallas kernels, "sequential" = the paper's Fig. 2 baseline).
+    Without a plan, the default uniform plan runs.  (The PR-1 global
+    ``backend=``/``parallelism=``/``mapmajor_u=`` flags were removed in
+    PR 7 — build the equivalent uniform plan with ``ExecutionPlan.uniform``
+    and pass ``plan=``.)
     """
-    eff = _resolve_plan(net, plan, modes or {}, parallelism, backend,
-                        mapmajor_u)
+    eff = _resolve_plan(net, plan, modes or {})
     return _execute(net, params, x, eff)[net.layers[-1].name]
 
 
@@ -206,5 +185,5 @@ def collect_activations(net: NetworkDescription, params, x: jnp.ndarray, *,
     intermediates do not exist; what remains (every group output) is
     exactly the set any group input — hence any parametric layer's input —
     refers to."""
-    eff = _resolve_plan(net, plan, modes or {}, None, None, None)
+    eff = _resolve_plan(net, plan, modes or {})
     return _execute(net, params, x, eff)

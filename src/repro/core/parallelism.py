@@ -24,8 +24,6 @@ a scalar), and the intra-thread vector unit is the MXU; see DESIGN.md §2.
 from __future__ import annotations
 
 import enum
-import warnings
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -183,21 +181,16 @@ def conv_policy(x, w, *, stride=1, padding="VALID",
                                    mode=mode)
 
 
-def conv2d(x, w, *, stride=1, padding="VALID", mode=ComputeMode.PRECISE,
-           parallelism: Optional[Parallelism] = None):
-    """Deprecated flag-style entry point.
+def conv2d(x, w, *, stride=1, padding="VALID", mode=ComputeMode.PRECISE):
+    """Single-convolution convenience: the canonical OLP implementation.
 
-    ``parallelism=`` belongs on a :class:`~repro.core.plan.LayerPlan`
-    (``conv2d_planned``) or, for policy baselines, :func:`conv_policy`;
-    passing it here keeps the historical behaviour but warns.
+    Policy selection does not belong here: pick a thread policy with
+    :func:`conv_policy` (baselines) or carry it on a
+    :class:`~repro.core.plan.LayerPlan` via ``conv2d_planned`` (planned
+    execution).  The PR-1 ``parallelism=`` kwarg was removed in PR 7.
     """
-    if parallelism is not None:
-        warnings.warn(
-            "conv2d(parallelism=...) is deprecated; build a LayerPlan and "
-            "call conv2d_planned, or use conv_policy for policy baselines",
-            DeprecationWarning, stacklevel=2)
     return conv_policy(x, w, stride=stride, padding=padding, mode=mode,
-                       parallelism=parallelism or Parallelism.OLP)
+                       parallelism=Parallelism.OLP)
 
 
 def conv2d_planned(x, w, plan, *, stride=1, padding="VALID"):

@@ -34,7 +34,6 @@ See DESIGN.md §3 for how plans flow through the synthesizer and executor.
 from __future__ import annotations
 
 import time
-import warnings
 from dataclasses import dataclass
 from typing import (TYPE_CHECKING, Callable, Dict, List, Optional, Sequence,
                     Tuple)
@@ -52,28 +51,10 @@ from .precision import ComputeMode
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .graph import GraphProgram
 
-#: Deprecated aliases for the historical hard-coded TPU v5e roofline
-#: constants.  The numbers now live in :data:`repro.device.TPU_V5E` (the
-#: default profile); per-device planning reads ``PlannerConfig.profile``
-#: instead.  Resolved through ``__getattr__`` below so every remaining use
-#: warns — do not add new ones.
-_DEPRECATED_CONSTANTS = {
-    "PEAK_FLOPS": lambda: DEFAULT_PROFILE.peak_flops_bf16,
-    "HBM_BW": lambda: DEFAULT_PROFILE.hbm_bandwidth,
-    # FLOPs/byte at which compute time equals memory time.
-    "RIDGE": lambda: DEFAULT_PROFILE.ridge("bf16"),
-}
-
-
-def __getattr__(name: str):
-    if name in _DEPRECATED_CONSTANTS:
-        warnings.warn(
-            f"repro.core.planner.{name} is a deprecated alias; read the "
-            f"target DeviceProfile (e.g. PlannerConfig.profile or "
-            f"repro.device.DEFAULT_PROFILE) instead",
-            DeprecationWarning, stacklevel=2)
-        return _DEPRECATED_CONSTANTS[name]()
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+# The historical hard-coded TPU v5e roofline constants (PEAK_FLOPS,
+# HBM_BW, RIDGE) lived here as deprecated module aliases until PR 7; the
+# numbers live in :data:`repro.device.TPU_V5E` (the default profile), and
+# per-device planning reads ``PlannerConfig.profile``.
 
 
 @dataclass(frozen=True)

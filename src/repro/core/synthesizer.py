@@ -46,7 +46,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -356,8 +355,6 @@ def synthesize(net: NetworkDescription,
                autotune: bool = False,
                autotune_input: Optional[jnp.ndarray] = None,
                max_iterations: int = MAX_SYNTHESIS_ITERATIONS,
-               parallelism: Optional[Parallelism] = None,
-               backend: Optional[str] = None,
                forced_mode: Optional[ComputeMode] = None,
                fuse: bool = True) -> SynthesizedProgram:
     """Run the full Cappuccino pipeline and return the synthesized program.
@@ -367,9 +364,9 @@ def synthesize(net: NetworkDescription,
     a :class:`~repro.device.DeviceProfile`, a registry name (``"tpu_v4"``),
     or ``"auto"`` (calibrated/cached profile for this host, deterministic
     builtin fallback off-TPU); every cost rule and the plan fingerprint are
-    taken under that device.  ``backend=`` / ``parallelism=`` are the
-    deprecated global flags, lowered to a uniform plan (legacy call sites
-    keep their exact historical dispatch).
+    taken under that device.  (The PR-1 ``backend=``/``parallelism=``
+    global flags were removed in PR 7 — pass an equivalent
+    ``plan=ExecutionPlan.uniform(...)`` instead.)
 
     With a validation set, Stages A and C run as a **fixed-point loop**
     (plan -> probe -> re-plan, ``max_iterations`` cap, deterministic
@@ -390,8 +387,7 @@ def synthesize(net: NetworkDescription,
     keyed by anchor layer name — every inexactable layer is a group
     anchor, so Stage C's per-layer search *is* the per-group search.  A
     supplied ``plan=`` keeps its own grouping (its ``graph`` field);
-    ``fuse=False`` and the deprecated ``backend=`` shim keep the
-    historical layer walk.
+    ``fuse=False`` keeps the historical layer walk.
 
     ``forced_mode`` skips stage C (and the gate — the caller is pinning
     modes deliberately, e.g. to reproduce the paper's 'Parallel' and
@@ -431,21 +427,10 @@ def synthesize(net: NetworkDescription,
     # Graph lowering happens first (fuse=True): the pass pipeline decides
     # the dispatch groups, then every planning/probing/validation step
     # below operates on the fused program.  A supplied plan= keeps its own
-    # grouping; the deprecated backend= shim keeps the legacy layer walk.
+    # grouping.
     if plan is None:
-        if backend is not None or parallelism is not None:
-            warnings.warn(
-                "synthesize(backend=..., parallelism=...) is deprecated; "
-                "pass plan= or let the planner run", DeprecationWarning,
-                stacklevel=2)
-            plan = ExecutionPlan.uniform(
-                net, backend=backend or "xla",
-                parallelism=parallelism or Parallelism.OLP,
-                profile=(planner_config.profile if planner_config is not None
-                         else PlannerConfig().profile))
-        else:
-            graph = lower_network(net) if fuse else None
-            plan = plan_network(net, config=planner_config, graph=graph)
+        graph = lower_network(net) if fuse else None
+        plan = plan_network(net, config=planner_config, graph=graph)
     tune_x = None
     if autotune:
         tune_x = autotune_input if autotune_input is not None else \

@@ -2,14 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.serve_cnn --net squeezenet \
       --scale 0.08 --input-hw 64 --requests 64 --max-batch 8 \
-      --max-delay-ms 2 --rate 200
+      --max-delay-ms 2 --rate 200 --replicas 2 --dispatch least_loaded
 
-Synthesizes the network (Stages A–C once), then drives the
-:class:`~repro.serving.SynthesisServer` with an open-loop stream of
-``--requests`` single images at ``--rate`` req/s (0 = back-to-back) via
-:func:`repro.serving.run_offered_load`, and prints sustained throughput,
-latency percentiles, and the plan/program-cache counters — Stage D
-compiles exactly ``log2(max_batch) + 1`` times (pre-warmed out-of-band).
+Synthesizes the network (Stages A–C once), builds a
+:class:`~repro.serving.ServingConfig` from the flags, and drives the
+data-parallel :class:`~repro.serving.ReplicaSet` with an open-loop stream
+of ``--requests`` single images at ``--rate`` req/s (0 = back-to-back)
+via :func:`repro.serving.run_offered_load`.  Prints sustained throughput,
+latency percentiles, per-replica warm-up (cold start) times, shed count,
+and the program-cache counters.
 """
 from __future__ import annotations
 
@@ -19,7 +20,7 @@ import jax
 
 from repro.cnn import WORKLOADS, init_network_params
 from repro.core import ComputeMode, synthesize
-from repro.serving import FlushPolicy, run_offered_load
+from repro.serving import DISPATCH_POLICIES, ServingConfig, run_offered_load
 
 
 def main():
@@ -33,6 +34,12 @@ def main():
                     help="offered load in req/s; 0 = back-to-back")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel replica count")
+    ap.add_argument("--dispatch", default="least_loaded",
+                    choices=sorted(DISPATCH_POLICIES))
+    ap.add_argument("--max-queue-depth", type=int, default=64,
+                    help="per-replica admission bound; 0 = unbounded")
     ap.add_argument("--mode", default="relaxed",
                     choices=[m.value for m in ComputeMode])
     ap.add_argument("--seed", type=int, default=0)
@@ -46,19 +53,27 @@ def main():
     print(f"  stages A-C in {program.synthesis_seconds:.2f}s, "
           f"program {program.fingerprint()}")
 
-    report = run_offered_load(
-        program, requests=args.requests, rate=args.rate,
-        policy=FlushPolicy(max_batch=args.max_batch,
-                           max_delay_s=args.max_delay_ms / 1e3),
-        seed=args.seed)
+    config = ServingConfig(max_batch=args.max_batch,
+                           max_delay_s=args.max_delay_ms / 1e3,
+                           replicas=args.replicas,
+                           dispatch=args.dispatch,
+                           max_queue_depth=args.max_queue_depth)
+    report = run_offered_load(program, requests=args.requests,
+                              rate=args.rate, config=config, seed=args.seed)
 
-    srv, cache = report.server_stats, report.cache_stats
-    print(f"served {report.requests} requests in {report.wall_seconds:.3f}s "
+    srv, cache, tier = (report.server_stats, report.cache_stats,
+                        report.tier_stats)
+    print(f"served {report.admitted}/{report.requests} requests "
+          f"({report.shed_requests} shed) across {report.replica_count} "
+          f"replica(s) in {report.wall_seconds:.3f}s "
           f"({report.sustained_per_s:.1f} img/s sustained)")
     print(f"latency ms: p50 {report.latency_ms(50):.2f}  "
           f"p95 {report.latency_ms(95):.2f}  max {report.latencies_ms[-1]:.2f}")
     print(f"batches: {srv['batches']}  buckets {srv['bucket_counts']}  "
-          f"padding {srv['padding_fraction']:.1%}")
+          f"padding {srv['padding_fraction']:.1%}  "
+          f"stolen {tier['stolen_requests']}  peak depth {tier['peak_depth']}")
+    warm = ", ".join(f"r{i}={s:.2f}s" for i, s in enumerate(report.warm_seconds))
+    print(f"cold start (warm-up): {warm}")
     print(f"program cache: {cache['stage_d_compiles']:.0f} Stage-D compiles "
           f"({cache['stage_d_seconds']:.2f}s), hit rate {cache['hit_rate']:.1%}")
 

@@ -1,25 +1,61 @@
 """Serving layer: batched inference over synthesized programs.
 
-Two engines live here:
+The public surface (everything in ``__all__`` — nothing else is
+supported):
 
+- :class:`ServingConfig` — the one configuration object for the tier:
+  bucket policy, cache budget, replica count, dispatch policy, admission
+  limits (DESIGN.md §11);
+- :class:`SynthesisServer` — one replica: a :class:`DynamicBatcher`
+  coalesces single-image requests into power-of-two buckets and a
+  :class:`ProgramCache` keeps one Stage-D compile per ``(network, bucket,
+  program fingerprint)`` (DESIGN.md §6);
+- :class:`ReplicaSet` — the data-parallel tier: N replicas (optionally
+  one per :class:`~repro.device.DeviceProfile`), pluggable least-loaded /
+  work-stealing dispatch, bounded queues with typed
+  :class:`LoadShedError` backpressure;
+- :func:`run_offered_load` / :func:`warm_replicas` — the open-loop
+  serving experiment;
 - :class:`ServingEngine` — the LLM prefill/decode loop (transformer
-  workloads);
-- :class:`SynthesisServer` — batched serving of Cappuccino-synthesized CNN
-  programs: a :class:`DynamicBatcher` coalesces single-image requests into
-  power-of-two buckets, and a :class:`ProgramCache` keeps one Stage-D
-  compile per ``(network, bucket, plan fingerprint)``.  See DESIGN.md §6.
+  workloads).
 """
 from .batcher import (Bucket, DynamicBatcher, FlushPolicy, ServingFuture,
                       pow2_bucket)
+from .config import ServingConfig
+from .dispatch import (DISPATCH_POLICIES, DispatchPolicy, LeastLoadedPolicy,
+                       LoadShedError, WorkStealingPolicy,
+                       resolve_dispatch_policy)
 from .engine import GenerationResult, ServingEngine
-from .loadgen import LoadReport, percentile, run_offered_load, warm_buckets
+from .loadgen import (LoadReport, percentile, run_offered_load, warm_buckets,
+                      warm_replicas)
 from .program_cache import CacheStats, ProgramCache
+from .replica import Replica, ReplicaSet
 from .server import ServerStats, SynthesisServer
 
 __all__ = [
-    "Bucket", "DynamicBatcher", "FlushPolicy", "ServingFuture", "pow2_bucket",
-    "ServingEngine", "GenerationResult",
-    "LoadReport", "percentile", "run_offered_load", "warm_buckets",
-    "CacheStats", "ProgramCache",
-    "ServerStats", "SynthesisServer",
+    "Bucket",
+    "CacheStats",
+    "DISPATCH_POLICIES",
+    "DispatchPolicy",
+    "DynamicBatcher",
+    "FlushPolicy",
+    "GenerationResult",
+    "LeastLoadedPolicy",
+    "LoadReport",
+    "LoadShedError",
+    "ProgramCache",
+    "Replica",
+    "ReplicaSet",
+    "ServerStats",
+    "ServingConfig",
+    "ServingEngine",
+    "ServingFuture",
+    "SynthesisServer",
+    "WorkStealingPolicy",
+    "percentile",
+    "pow2_bucket",
+    "resolve_dispatch_policy",
+    "run_offered_load",
+    "warm_buckets",
+    "warm_replicas",
 ]

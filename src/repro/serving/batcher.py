@@ -24,8 +24,12 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass
-from typing import Any, List, Optional
+from typing import TYPE_CHECKING, Any, List, Optional
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .config import ServingConfig
 
 
 def pow2_bucket(n: int) -> int:
@@ -114,8 +118,21 @@ class Bucket:
 
 
 class DynamicBatcher:
-    def __init__(self, policy: Optional[FlushPolicy] = None):
-        self.policy = policy or FlushPolicy()
+    def __init__(self, policy: Optional[FlushPolicy] = None, *,
+                 config: "Optional[ServingConfig]" = None):
+        from .config import ServingConfig
+
+        if policy is not None:
+            if config is not None:
+                raise ValueError("pass either config= or the deprecated "
+                                 "policy= FlushPolicy, not both")
+            warnings.warn(
+                "DynamicBatcher(policy=FlushPolicy(...)) is deprecated; "
+                "pass config=ServingConfig(...) — the consolidated serving "
+                "configuration", DeprecationWarning, stacklevel=2)
+            self.policy = policy
+        else:
+            self.policy = (config or ServingConfig()).flush_policy()
         self._queue: List[Request] = []
         # Reentrant: the server's dispatch loop queries depth/deadline while
         # holding the condition to sleep on it.
@@ -155,6 +172,25 @@ class DynamicBatcher:
             if not self._queue:
                 return None
             return self._queue[0].enqueue_time + self.policy.max_delay_s
+
+    # -- work stealing ------------------------------------------------------
+    def steal(self, max_n: int) -> List[Request]:
+        """Pop up to ``max_n`` of the *newest* queued requests (the tail).
+
+        The work-stealing primitive for the replica tier: the owner
+        releases buckets from the head (oldest first, preserving FIFO and
+        deadline order), so a thief takes from the opposite end — the
+        requests furthest from their deadline, which the victim would have
+        served last anyway.  Returns the stolen requests oldest-first.
+        """
+        if max_n < 1:
+            return []
+        with self._lock:
+            n = min(max_n, len(self._queue))
+            if n == 0:
+                return []
+            stolen, self._queue = self._queue[-n:], self._queue[:-n]
+            return stolen
 
     # -- bucket release -----------------------------------------------------
     def take(self, now: Optional[float] = None,

@@ -33,9 +33,12 @@ import threading
 import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import TYPE_CHECKING, Dict, Optional, Tuple
 
 from ..core.synthesizer import BatchProgram, SynthesizedProgram
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .config import ServingConfig
 
 CacheKey = Tuple[str, int, str]          # (network, bucket, program fp)
 
@@ -67,12 +70,27 @@ class CacheStats:
 class ProgramCache:
     """LRU cache of compiled :class:`BatchProgram` executables.
 
-    ``max_entries`` bounds level 2 (compiled executables hold device
-    buffers); level 1 holds one ``SynthesizedProgram`` per admitted
+    ``config.cache_entries`` bounds level 2 (compiled executables hold
+    device buffers); level 1 holds one ``SynthesizedProgram`` per admitted
     ``(network, fingerprint)`` and is not evicted — weights live there.
+    ``max_entries=`` is the deprecated pre-:class:`~repro.serving.config.
+    ServingConfig` spelling of the same budget.
     """
 
-    def __init__(self, max_entries: int = 64):
+    def __init__(self, max_entries: Optional[int] = None, *,
+                 config: "Optional[ServingConfig]" = None):
+        from .config import ServingConfig
+
+        if max_entries is not None:
+            if config is not None:
+                raise ValueError("pass either config= or the deprecated "
+                                 "max_entries=, not both")
+            warnings.warn(
+                "ProgramCache(max_entries=...) is deprecated; pass "
+                "config=ServingConfig(cache_entries=...) — the consolidated "
+                "serving configuration", DeprecationWarning, stacklevel=2)
+        else:
+            max_entries = (config or ServingConfig()).cache_entries
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self.max_entries = max_entries
@@ -134,13 +152,6 @@ class ProgramCache:
                 self._compiled.popitem(last=False)
                 self.stats.evictions += 1
             return compiled
-
-    def get(self, program: SynthesizedProgram, batch: int) -> BatchProgram:
-        """Deprecated historical name for :meth:`get_or_build`."""
-        warnings.warn(
-            "ProgramCache.get is deprecated; use get_or_build (same "
-            "semantics, honest name)", DeprecationWarning, stacklevel=2)
-        return self.get_or_build(program, batch)
 
     def __len__(self) -> int:
         with self._lock:

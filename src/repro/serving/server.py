@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
@@ -32,6 +33,7 @@ import numpy as np
 
 from ..core.synthesizer import SynthesizedProgram
 from .batcher import Bucket, DynamicBatcher, FlushPolicy, ServingFuture
+from .config import ServingConfig
 from .program_cache import ProgramCache
 
 
@@ -65,20 +67,35 @@ class ServerStats:
 class SynthesisServer:
     """Serve one synthesized program under a dynamic batching policy.
 
-    ``program`` carries Stages A–C (plan + prepared weights); the server
-    only ever triggers Stage D, through the shared ``cache`` — pass one
+    ``config`` is the consolidated :class:`~repro.serving.config.
+    ServingConfig` — bucket policy and cache budget both come from it
+    (``policy=`` is the deprecated pre-config spelling).  ``program``
+    carries Stages A–C (plan + prepared weights); the server only ever
+    triggers Stage D, through the shared ``cache`` — pass one
     ``ProgramCache`` to several servers to share compiled buckets across
-    replicas of the same network/plan.
+    replicas of the same network/plan (what ``ReplicaSet`` does).
     """
 
     def __init__(self, program: SynthesizedProgram, *,
+                 config: Optional[ServingConfig] = None,
                  cache: Optional[ProgramCache] = None,
                  policy: Optional[FlushPolicy] = None):
+        if policy is not None:
+            if config is not None:
+                raise ValueError("pass either config= or the deprecated "
+                                 "policy= FlushPolicy, not both")
+            warnings.warn(
+                "SynthesisServer(policy=FlushPolicy(...)) is deprecated; "
+                "pass config=ServingConfig(...) — the consolidated serving "
+                "configuration", DeprecationWarning, stacklevel=2)
+            config = ServingConfig.from_flush_policy(policy)
+        self.config = config or ServingConfig()
         self.program = program
-        self.cache = cache if cache is not None else ProgramCache()
-        self.policy = policy or FlushPolicy()
+        self.cache = cache if cache is not None else \
+            ProgramCache(config=self.config)
+        self.policy = self.config.flush_policy()
         self.cache.admit(program)
-        self.batcher = DynamicBatcher(self.policy)
+        self.batcher = DynamicBatcher(config=self.config)
         self.stats = ServerStats()
         self._stats_lock = threading.Lock()   # submit() races the loop
         self._thread: Optional[threading.Thread] = None
@@ -108,7 +125,13 @@ class SynthesisServer:
         return fut.result(timeout)
 
     # -- dispatch side ------------------------------------------------------
-    def _dispatch(self, bucket: Bucket) -> None:
+    def dispatch_bucket(self, bucket: Bucket) -> None:
+        """Pad, execute, and scatter one released bucket.
+
+        Public because the replica tier dispatches buckets it took (or
+        stole) itself; the bucket need not come from this server's own
+        batcher — work stealing dispatches a peer's requests here.
+        """
         try:
             compiled = self.cache.get_or_build(self.program, bucket.batch)
             x = jnp.stack([jnp.asarray(r.image, self.program.input_dtype)
@@ -137,7 +160,7 @@ class SynthesisServer:
         bucket = self.batcher.take(force=force)
         if bucket is None:
             return 0
-        self._dispatch(bucket)
+        self.dispatch_bucket(bucket)
         return len(bucket.requests)
 
     def drain(self) -> int:
@@ -158,7 +181,7 @@ class SynthesisServer:
                     self.batcher.not_empty.wait(timeout=poll)
             bucket = self.batcher.take()
             if bucket is not None:
-                self._dispatch(bucket)
+                self.dispatch_bucket(bucket)
                 continue
             # queued but no trigger fired yet: sleep until the oldest
             # request's deadline (capped at poll so stop() stays responsive)

@@ -1,15 +1,28 @@
-"""The deprecated global backend=/parallelism= flags must keep working:
-they warn, and they lower to exactly the uniform ExecutionPlan."""
+"""The deprecation contract after the PR-7 consolidation.
+
+Two halves:
+
+  * the PR-2/PR-5 deprecation layer is *retired* — ``ProgramCache.get``,
+    ``run_network(backend=/parallelism=/mapmajor_u=)``,
+    ``synthesize(backend=/parallelism=)``, ``conv2d(parallelism=)`` and the
+    ``planner.PEAK_FLOPS/HBM_BW/RIDGE`` aliases are gone; the removed
+    names must raise ``AttributeError``/``TypeError``, not warn;
+  * the *new* shims introduced with :class:`ServingConfig` — the old
+    per-constructor kwargs (``SynthesisServer(policy=)``,
+    ``DynamicBatcher(policy)``, ``ProgramCache(max_entries=)``,
+    ``run_offered_load(policy=)``) — must emit a ``DeprecationWarning``
+    pointing at the *caller's* frame and lower to exactly the config path.
+"""
 import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (ComputeMode, ExecutionPlan, Parallelism, run_network,
-                        synthesize)
 from repro.cnn import init_network_params, squeezenet
+from repro.core import ComputeMode, ExecutionPlan, run_network, synthesize
+from repro.serving import (DynamicBatcher, FlushPolicy, ProgramCache,
+                           ServingConfig, SynthesisServer, run_offered_load)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -22,176 +35,157 @@ def small_net():
     return net, params, x
 
 
-@pytest.mark.parametrize("backend,parallelism", [
-    ("xla", Parallelism.OLP),
-    ("xla", Parallelism.FLP),
-    ("pallas", Parallelism.OLP),
-])
-def test_run_network_shim_warns_and_matches_uniform_plan(small_net, backend,
-                                                         parallelism):
+@pytest.fixture(scope="module")
+def program(small_net):
+    net, params, _ = small_net
+    return synthesize(net, params, forced_mode=ComputeMode.PRECISE)
+
+
+def _deprecation_records(record):
+    return [r for r in record if issubclass(r.category, DeprecationWarning)]
+
+
+# ------------------------------------------------ retired: PR-2/PR-5 layer --
+def test_run_network_flag_kwargs_are_gone(small_net):
     net, params, x = small_net
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        legacy = run_network(net, params, x, backend=backend,
-                             parallelism=parallelism)
-    plan = ExecutionPlan.uniform(net, backend=backend,
-                                 parallelism=parallelism)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)  # plan= is clean
-        planned = run_network(net, params, x, plan=plan)
-    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(planned))
+    for bad in ({"backend": "xla"}, {"parallelism": "olp"},
+                {"mapmajor_u": 64}):
+        with pytest.raises(TypeError):
+            run_network(net, params, x, **bad)
 
 
-def test_run_network_rejects_plan_plus_flags(small_net):
+def test_run_network_plan_is_the_only_override(small_net):
     net, params, x = small_net
     plan = ExecutionPlan.uniform(net)
-    with pytest.raises(ValueError, match="not both"):
-        run_network(net, params, x, plan=plan, backend="xla")
-
-
-def test_synthesize_shim_warns_and_matches_uniform_plan(small_net):
-    net, params, x = small_net
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        legacy = synthesize(net, params, forced_mode=ComputeMode.PRECISE,
-                            backend="xla", parallelism=Parallelism.OLP)
-    modes = {n: ComputeMode.PRECISE for n in net.inexactable_layers}
-    plan = ExecutionPlan.uniform(net, backend="xla",
-                                 parallelism=Parallelism.OLP, modes=modes)
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
-        explicit = synthesize(net, params, forced_mode=ComputeMode.PRECISE,
-                              plan=plan)
-    assert legacy.plan.fingerprint() == explicit.plan.fingerprint()
-    np.testing.assert_array_equal(np.asarray(legacy.infer(x)),
-                                  np.asarray(explicit.infer(x)))
+        out = run_network(net, params, x, plan=plan)
+    assert np.asarray(out).shape == (2, 10)
+
+
+def test_synthesize_flag_kwargs_are_gone(small_net):
+    net, params, _ = small_net
+    with pytest.raises(TypeError):
+        synthesize(net, params, backend="xla")
+    with pytest.raises(TypeError):
+        synthesize(net, params, parallelism="olp")
 
 
 def test_uniform_plan_unknown_backend_raises(small_net):
+    """ExecutionPlan.uniform(backend=) is the *non*-deprecated spelling —
+    it stays, and keeps validating."""
     net, _, _ = small_net
     with pytest.raises(ValueError, match="unknown backend"):
         ExecutionPlan.uniform(net, backend="cuda")
 
 
-def test_program_cache_get_alias_warns_and_delegates(small_net):
-    """ProgramCache.get is the deprecated name for get_or_build: it must
-    emit a DeprecationWarning and return the identical cached executable."""
-    from repro.serving import ProgramCache
-
-    net, params, _ = small_net
-    program = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
-    cache = ProgramCache()
-    cache.admit(program)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)  # clean name
-        built = cache.get_or_build(program, 1)
-    with pytest.warns(DeprecationWarning, match="get_or_build"):
-        aliased = cache.get(program, 1)
-    assert aliased is built
-
-
-def test_warm_buckets_is_off_the_deprecated_alias(small_net):
-    """serving.loadgen.warm_buckets migrated to get_or_build — warming must
-    not trip the alias's DeprecationWarning."""
-    from repro.serving import ProgramCache, warm_buckets
-
-    net, params, _ = small_net
-    program = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
-    cache = ProgramCache()
-    cache.admit(program)
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        warm_buckets(cache, program, max_batch=2)
-    assert len(cache) == 2                     # buckets 1 and 2 compiled
-
-
-# --------------------------------------------------------- new in PR 5 ----
-def _deprecation_records(record):
-    return [r for r in record if issubclass(r.category, DeprecationWarning)]
-
-
-def test_conv2d_parallelism_shim_warns_and_matches_conv_policy():
-    """conv2d(parallelism=...) is deprecated: it must warn (pointing at the
-    *caller*, i.e. this file) and keep the historical policy dispatch."""
+def test_conv2d_parallelism_kwarg_is_gone():
     from repro.core import Parallelism, conv2d, conv_policy
 
     x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 8, 8))
     w = jax.random.normal(jax.random.PRNGKey(1), (6, 4, 3, 3)) * 0.1
-    with warnings.catch_warnings(record=True) as record:
-        warnings.simplefilter("always")
-        legacy = conv2d(x, w, padding="SAME", parallelism=Parallelism.FLP)
-    dep = _deprecation_records(record)
-    assert dep and "conv2d(parallelism=" in str(dep[0].message)
-    assert dep[0].filename == __file__          # stacklevel points here
-    clean = conv_policy(x, w, padding="SAME", parallelism=Parallelism.FLP)
-    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(clean))
-
-
-def test_conv2d_without_parallelism_is_clean():
-    from repro.core import conv2d
-
-    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 8, 8))
-    w = jax.random.normal(jax.random.PRNGKey(1), (6, 4, 3, 3)) * 0.1
+    with pytest.raises(TypeError):
+        conv2d(x, w, padding="SAME", parallelism=Parallelism.FLP)
+    # the clean call survives and still means OLP policy dispatch
     with warnings.catch_warnings():
         warnings.simplefilter("error", DeprecationWarning)
-        conv2d(x, w, padding="SAME")
+        out = conv2d(x, w, padding="SAME")
+    clean = conv_policy(x, w, padding="SAME", parallelism=Parallelism.OLP)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(clean))
 
 
-@pytest.mark.parametrize("name,profile_value", [
-    ("PEAK_FLOPS", lambda p: p.peak_flops_bf16),
-    ("HBM_BW", lambda p: p.hbm_bandwidth),
-    ("RIDGE", lambda p: p.ridge("bf16")),
-])
-def test_planner_constant_aliases_warn_and_read_default_profile(
-        name, profile_value):
-    """planner.PEAK_FLOPS/HBM_BW/RIDGE are deprecated aliases of the
-    default DeviceProfile: access warns at the caller's frame and the
-    value still agrees with the profile."""
-    from repro.core import planner
-    from repro.device import DEFAULT_PROFILE
-
-    with warnings.catch_warnings(record=True) as record:
-        warnings.simplefilter("always")
-        value = getattr(planner, name)
-    dep = _deprecation_records(record)
-    assert dep and "deprecated alias" in str(dep[0].message)
-    assert dep[0].filename == __file__          # stacklevel points here
-    assert value == profile_value(DEFAULT_PROFILE)
-
-
-def test_planner_unknown_attribute_still_raises():
+@pytest.mark.parametrize("name", ["PEAK_FLOPS", "HBM_BW", "RIDGE"])
+def test_planner_constant_aliases_are_gone(name):
     from repro.core import planner
 
-    with pytest.raises(AttributeError, match="NO_SUCH_CONSTANT"):
-        planner.NO_SUCH_CONSTANT
+    with pytest.raises(AttributeError):
+        getattr(planner, name)
 
 
-def test_run_network_shim_stacklevel_points_at_caller(small_net):
-    net, params, x = small_net
-    with warnings.catch_warnings(record=True) as record:
-        warnings.simplefilter("always")
-        run_network(net, params, x, backend="xla")
-    dep = _deprecation_records(record)
-    assert dep and dep[0].filename == __file__
-
-
-def test_synthesize_shim_stacklevel_points_at_caller(small_net):
-    net, params, _ = small_net
-    with warnings.catch_warnings(record=True) as record:
-        warnings.simplefilter("always")
-        synthesize(net, params, forced_mode=ComputeMode.PRECISE,
-                   backend="xla")
-    dep = _deprecation_records(record)
-    assert dep and dep[0].filename == __file__
-
-
-def test_program_cache_get_stacklevel_points_at_caller(small_net):
-    from repro.serving import ProgramCache
-
-    net, params, _ = small_net
-    program = synthesize(net, params, forced_mode=ComputeMode.PRECISE)
+def test_program_cache_get_alias_is_gone(program):
     cache = ProgramCache()
     cache.admit(program)
+    with pytest.raises(AttributeError):
+        cache.get(program, 1)
+    assert cache.get_or_build(program, 1) is not None
+
+
+def test_public_surface_is_declared():
+    """Both packages pin their surface with __all__, and every exported
+    name resolves."""
+    import repro
+    import repro.serving as serving
+
+    for pkg in (repro, serving):
+        assert pkg.__all__ == sorted(pkg.__all__)
+        for name in pkg.__all__:
+            assert getattr(pkg, name) is not None
+    assert "ServingConfig" in serving.__all__
+    assert "ReplicaSet" in serving.__all__
+    with pytest.raises(AttributeError):
+        repro.no_such_module
+
+
+# ------------------------------------------- new: ServingConfig-era shims ---
+def test_server_policy_kwarg_warns_and_lowers_to_config(program):
+    policy = FlushPolicy(max_batch=4, max_delay_s=60.0)
     with warnings.catch_warnings(record=True) as record:
         warnings.simplefilter("always")
-        cache.get(program, 1)
+        legacy = SynthesisServer(program, policy=policy)
     dep = _deprecation_records(record)
-    assert dep and dep[0].filename == __file__
+    assert dep and "ServingConfig" in str(dep[0].message)
+    assert dep[0].filename == __file__          # stacklevel points here
+    assert legacy.config == ServingConfig.from_flush_policy(policy)
+    assert legacy.policy == policy              # same bucket behavior
+    with pytest.raises(ValueError, match="not both"):
+        SynthesisServer(program, policy=policy, config=ServingConfig())
+
+
+def test_batcher_policy_arg_warns_and_matches_config_path():
+    policy = FlushPolicy(max_batch=4, max_delay_s=60.0)
+    with pytest.warns(DeprecationWarning, match="ServingConfig"):
+        legacy = DynamicBatcher(policy)
+    clean = DynamicBatcher(config=ServingConfig(max_batch=4,
+                                                max_delay_s=60.0))
+    assert legacy.policy == clean.policy
+    with pytest.raises(ValueError, match="not both"):
+        DynamicBatcher(policy, config=ServingConfig())
+
+
+def test_program_cache_max_entries_warns_and_is_honored(program):
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        cache = ProgramCache(max_entries=2)
+    dep = _deprecation_records(record)
+    assert dep and "cache_entries" in str(dep[0].message)
+    assert dep[0].filename == __file__
+    assert cache.max_entries == 2
+    with pytest.raises(ValueError, match="not both"):
+        ProgramCache(max_entries=2, config=ServingConfig())
+
+
+def test_run_offered_load_policy_kwarg_warns(program):
+    with warnings.catch_warnings(record=True) as record:
+        warnings.simplefilter("always")
+        report = run_offered_load(
+            program, requests=4,
+            policy=FlushPolicy(max_batch=2, max_delay_s=0.001))
+    dep = _deprecation_records(record)
+    assert dep and "ServingConfig" in str(dep[0].message)
+    assert dep[0].filename == __file__
+    assert report.admitted == 4 and report.replica_count == 1
+    with pytest.raises(ValueError, match="not both"):
+        run_offered_load(program, requests=1,
+                         policy=FlushPolicy(), config=ServingConfig())
+
+
+def test_config_path_is_warning_free(program):
+    """The blessed spelling never trips a DeprecationWarning anywhere in
+    the serving stack."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        config = ServingConfig(max_batch=2, max_delay_s=60.0, replicas=2)
+        server = SynthesisServer(program, config=config)
+        img = np.zeros(program.net.input_shape, np.float32)
+        server.infer_one(img)
+        run_offered_load(program, requests=2, config=config, warm=False)

@@ -343,24 +343,17 @@ def test_replan_keeps_supplied_plans_device():
 
 
 # ------------------------------------------- single source of constants ----
-def test_planner_and_roofline_read_the_same_profile():
-    """Regression for the old sync-by-comment: the planner's deprecated
-    aliases and the roofline benchmark's constants must both be *reads* of
-    the same DeviceProfile object (import-level agreement, no hand sync).
-    The planner aliases now warn on access (tests/test_deprecated_shims.py
-    pins the warning); the values must still agree."""
-    import warnings
-
+def test_roofline_reads_the_default_profile():
+    """Regression for the old sync-by-comment: the roofline benchmark's
+    constants must be *reads* of the default DeviceProfile object
+    (import-level agreement, no hand sync).  The planner-side aliases were
+    retired in PR 7 (tests/test_deprecated_shims.py pins the removal) —
+    the profile itself is the single source now."""
     import benchmarks.roofline as roofline
-    from repro.core import planner
 
     assert roofline.PROFILE is TPU_V5E
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        assert planner.PEAK_FLOPS == TPU_V5E.peak_flops_bf16 \
-            == roofline.PEAK_FLOPS
-        assert planner.HBM_BW == TPU_V5E.hbm_bandwidth == roofline.HBM_BW
-        assert planner.RIDGE == TPU_V5E.ridge("bf16")
+    assert roofline.PEAK_FLOPS == TPU_V5E.peak_flops_bf16
+    assert roofline.HBM_BW == TPU_V5E.hbm_bandwidth
     assert roofline.LINK_BW == TPU_V5E.link_bandwidth
 
 

@@ -193,15 +193,20 @@ def test_legacy_flags_lower_to_uniform_plan():
         ExecutionPlan.uniform(net, backend="renderscript")
 
 
-def test_run_network_rejects_plan_plus_flags():
+def test_run_network_takes_only_plan_and_modes():
+    """The PR-2 global flags (backend=/parallelism=/mapmajor_u=) were
+    retired in PR 7: plan= is the only execution override left, and the
+    old spellings fail as unknown kwargs rather than warning."""
     net = NetworkDescription("tiny", (4, 8, 8))
     net.conv("c1", 4, 3, inputs=("input",))
     params = init_network_params(net, jax.random.PRNGKey(0))
     x = jnp.zeros((1, 4, 8, 8))
-    with pytest.raises(ValueError):
-        run_network(net, params, x, plan=plan_network(net), backend="xla")
-    with pytest.raises(ValueError):
+    with pytest.raises(TypeError):
+        run_network(net, params, x, backend="xla")
+    with pytest.raises(TypeError):
         run_network(net, params, x, plan=plan_network(net), mapmajor_u=64)
+    out = run_network(net, params, x, plan=plan_network(net))
+    assert np.asarray(out).shape[0] == 1
 
 
 def test_synthesize_report_prints_plan_table():

@@ -90,13 +90,13 @@ def test_mixed_buckets_compile_once_each(program):
     assert out.shape == (4, 4)
 
 
-def test_get_alias_shares_entries(program):
-    """The deprecated ``get`` name warns but hits the same entries as
-    get_or_build — no split cache during the migration window."""
+def test_get_alias_is_retired(program):
+    """The migration window closed in PR 7: the deprecated ``get`` alias
+    is gone, and get_or_build is the only entry point."""
     cache = ProgramCache()
     cache.admit(program)
     a = cache.get_or_build(program, 2)
-    with pytest.warns(DeprecationWarning, match="get_or_build"):
-        b = cache.get(program, 2)
-    assert a is b
+    with pytest.raises(AttributeError):
+        cache.get(program, 2)
+    assert cache.get_or_build(program, 2) is a
     assert cache.stats.stage_d_compiles == 1 and cache.stats.hits == 1

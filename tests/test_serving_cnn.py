@@ -18,7 +18,7 @@ from repro.cnn import init_network_params, squeezenet
 from repro.core import (ComputeMode, ExecutionPlan, LayerPlan, Parallelism,
                         plan_network, synthesize)
 from repro.serving import (DynamicBatcher, FlushPolicy, ProgramCache,
-                           SynthesisServer, pow2_bucket)
+                           ServingConfig, SynthesisServer, pow2_bucket)
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -41,7 +41,7 @@ def test_flush_policy_validation():
 
 
 def test_batcher_depth_trigger_and_split():
-    b = DynamicBatcher(FlushPolicy(max_batch=4, max_delay_s=60.0))
+    b = DynamicBatcher(config=ServingConfig(max_batch=4, max_delay_s=60.0))
     for i in range(6):
         b.submit(i)
     # depth 6 >= trigger 4: one full bucket comes out...
@@ -58,7 +58,7 @@ def test_batcher_depth_trigger_and_split():
 
 
 def test_batcher_deadline_trigger():
-    b = DynamicBatcher(FlushPolicy(max_batch=8, max_delay_s=0.01))
+    b = DynamicBatcher(config=ServingConfig(max_batch=8, max_delay_s=0.01))
     b.submit("x")
     now = time.perf_counter()
     assert not b.ready(now)                      # too fresh
@@ -70,8 +70,8 @@ def test_batcher_deadline_trigger():
 
 
 def test_batcher_pads_to_pow2():
-    b = DynamicBatcher(FlushPolicy(max_batch=8, flush_depth=3,
-                                   max_delay_s=60.0))
+    b = DynamicBatcher(config=ServingConfig(max_batch=8, flush_depth=3,
+                                            max_delay_s=60.0))
     for i in range(3):
         b.submit(i)
     bucket = b.take()
@@ -154,7 +154,7 @@ def test_program_cache_requires_admit(program):
 
 
 def test_program_cache_lru_eviction(program):
-    cache = ProgramCache(max_entries=2)
+    cache = ProgramCache(config=ServingConfig(cache_entries=2))
     cache.admit(program)
     a1 = cache.get_or_build(program, 1)
     cache.get_or_build(program, 2)
@@ -183,7 +183,7 @@ def test_server_round_trip_bitwise_and_compile_bound(program):
     direct = np.asarray(program.for_batch(n)(jnp.asarray(imgs)))
 
     server = SynthesisServer(
-        program, policy=FlushPolicy(max_batch=8, max_delay_s=60.0))
+        program, config=ServingConfig(max_batch=8, max_delay_s=60.0))
     futures = [server.submit(imgs[i]) for i in range(n)]
     assert server.drain() == n
     outs = np.stack([f.result(timeout=5.0) for f in futures])
@@ -204,8 +204,8 @@ def test_server_threaded_round_trip(program):
     direct = np.asarray(program.for_batch(n)(jnp.asarray(imgs)))
 
     with SynthesisServer(program,
-                         policy=FlushPolicy(max_batch=4,
-                                            max_delay_s=0.005)) as server:
+                         config=ServingConfig(max_batch=4,
+                                              max_delay_s=0.005)) as server:
         futures = [server.submit(imgs[i]) for i in range(n)]
         outs = np.stack([f.result(timeout=60.0) for f in futures])
     np.testing.assert_array_equal(outs, direct)
@@ -243,8 +243,8 @@ def test_server_concurrent_submitters(program):
 
     results = {}
     with SynthesisServer(program,
-                         policy=FlushPolicy(max_batch=8,
-                                            max_delay_s=0.002)) as server:
+                         config=ServingConfig(max_batch=8,
+                                              max_delay_s=0.002)) as server:
         def client(t):
             futs = [server.submit(imgs[t, i]) for i in range(per_thread)]
             results[t] = np.stack([f.result(timeout=60.0) for f in futs])
