@@ -41,6 +41,9 @@ REQUIRED_METRICS: Dict[str, List[str]] = {
                      "googlenet_dispatches_int8",
                      "googlenet_latency_speedup",
                      "max_parity_diff"],
+    "obs_overhead": ["overhead_pct", "enabled_ms_per_request",
+                     "disabled_ms_per_request",
+                     "drift_mean_abs_error_pct", "drift_groups"],
 }
 
 

@@ -25,6 +25,8 @@ import jax
 
 from repro.cnn import WORKLOADS, init_network_params
 from repro.core import ComputeMode, synthesize
+from repro.obs import (MetricsRegistry, Tracer, measure_drift, render_table,
+                       write_metrics_json, write_trace_jsonl)
 from repro.serving import DISPATCH_POLICIES, ServingConfig, run_offered_load
 
 from .bench_schema import SCHEMA_VERSION, write_bench
@@ -35,13 +37,22 @@ def run(net_name: str = "squeezenet", *, scale: float = 0.08,
         rate: float = 0.0, max_batch: int = 8, max_delay_ms: float = 2.0,
         replicas: int = 2, dispatch: str = "least_loaded",
         max_queue_depth: int = 64,
-        mode: ComputeMode = ComputeMode.RELAXED, seed: int = 0) -> Dict:
+        mode: ComputeMode = ComputeMode.RELAXED, seed: int = 0,
+        drift_reps: int = 2) -> Dict:
     """Run the offered-load experiment at 1..replicas and return the
-    BENCH document."""
+    BENCH document.  ``doc["obs"]`` carries the widest tier's
+    :class:`~repro.obs.MetricsRegistry`, :class:`~repro.obs.Tracer`, and
+    :class:`~repro.obs.DriftReport` (stripped before ``write_bench``)."""
     net = WORKLOADS[net_name](scale=scale, num_classes=num_classes,
                               input_hw=input_hw)
     params = init_network_params(net, jax.random.PRNGKey(seed))
-    program = synthesize(net, params, forced_mode=mode)
+    # One registry/tracer covers synthesis, the *widest* serving tier run
+    # (the headline), and the drift probe; the narrower warm-up tiers get
+    # their own registries so their series don't sum into the headline's.
+    registry = MetricsRegistry()
+    tracer = Tracer(clock=registry.clock)
+    program = synthesize(net, params, forced_mode=mode,
+                         registry=registry, tracer=tracer)
 
     config = ServingConfig(max_batch=max_batch,
                            max_delay_s=max_delay_ms / 1e3,
@@ -49,9 +60,15 @@ def run(net_name: str = "squeezenet", *, scale: float = 0.08,
                            max_queue_depth=max_queue_depth)
     reports = {}
     for r in range(1, replicas + 1):
+        headline = r == replicas
         reports[r] = run_offered_load(
             program, requests=requests, rate=rate,
-            config=config.with_replicas(r), seed=seed)
+            config=config.with_replicas(r), seed=seed,
+            registry=registry if headline else None,
+            tracer=tracer if headline else None)
+
+    drift = measure_drift(program, batch=max_batch, reps=drift_reps,
+                          registry=registry, tracer=tracer)
 
     top = reports[replicas]                  # the widest tier is the headline
     base = reports[1]
@@ -66,6 +83,8 @@ def run(net_name: str = "squeezenet", *, scale: float = 0.08,
              for i, s in enumerate(top.warm_seconds)]
     rows += [{"name": f"bucket_{b}_batches", "value": n}
              for b, n in sorted(top.bucket_counts.items())]
+    rows += [{"name": f"drift_{g.group}_error_pct", "value": g.error_pct}
+             for g in drift.groups]
     return {
         "benchmark": "serving_throughput",
         "schema_version": SCHEMA_VERSION,
@@ -99,8 +118,11 @@ def run(net_name: str = "squeezenet", *, scale: float = 0.08,
             "cache_hit_rate": cache["hit_rate"],
             "warm_seconds_total": sum(top.warm_seconds),
             "synthesis_seconds": program.synthesis_seconds,
+            "drift_mean_abs_error_pct": drift.mean_abs_error_pct,
+            "drift_groups": len(drift.groups),
         },
         "rows": rows,
+        "obs": {"registry": registry, "tracer": tracer, "drift": drift},
     }
 
 
@@ -122,6 +144,10 @@ def main():
     ap.add_argument("--mode", default="relaxed",
                     choices=[m.value for m in ComputeMode])
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the tier's JSON metrics snapshot here")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the tier's trace spans as JSONL here")
     args = ap.parse_args()
 
     if args.smoke:
@@ -134,6 +160,7 @@ def main():
               replicas=args.replicas, dispatch=args.dispatch,
               max_queue_depth=args.max_queue_depth,
               mode=ComputeMode(args.mode))
+    obs = doc.pop("obs")
     write_bench(args.out, doc)
     m = doc["metrics"]
     print(f"wrote {args.out}: {m['sustained_imgs_per_s']:.1f} img/s at "
@@ -143,6 +170,18 @@ def main():
           f"p50 {m['latency_p50_ms']:.2f} ms, p95 {m['latency_p95_ms']:.2f} ms,"
           f" {m['shed_requests']:.0f} shed,"
           f" {m['stage_d_compiles']:.0f} Stage-D compiles")
+    print("\nmetrics snapshot (widest tier):")
+    print(render_table(obs["registry"]))
+    print("\ncost-model drift (predicted vs measured per group):")
+    print(obs["drift"].table())
+    if args.metrics_out:
+        write_metrics_json(args.metrics_out, obs["registry"],
+                           meta={"benchmark": "serving_throughput",
+                                 "net": args.net, "replicas": args.replicas})
+        print(f"\nmetrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        write_trace_jsonl(args.trace_out, obs["tracer"])
+        print(f"trace spans -> {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,9 @@ user composes the pipeline from:
 - ``repro.device``   frozen ``DeviceProfile``\\ s + calibration;
 - ``repro.kernels``  the map-major Pallas conv/matmul kernels;
 - ``repro.serving``  the serving tier: batching, program cache, the
-                     data-parallel ``ReplicaSet`` (DESIGN.md §6/§11).
+                     data-parallel ``ReplicaSet`` (DESIGN.md §6/§11);
+- ``repro.obs``      observability: metrics registry, trace spans,
+                     exporters, cost-model drift (DESIGN.md §12).
 
 Subpackages are imported lazily so ``import repro`` stays cheap — nothing
 JAX-heavy runs until a subpackage is touched.  Anything not reachable
@@ -21,7 +23,7 @@ from __future__ import annotations
 
 import importlib
 
-__all__ = ["cnn", "core", "device", "kernels", "serving"]
+__all__ = ["cnn", "core", "device", "kernels", "obs", "serving"]
 
 
 def __getattr__(name: str):

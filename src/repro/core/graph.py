@@ -29,7 +29,8 @@ compute-bound side of the per-device ridge point.  See DESIGN.md §9.
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass, replace
+import threading
+from dataclasses import dataclass, field as dataclass_field, replace
 from typing import (TYPE_CHECKING, Callable, Dict, Iterable, List, Optional,
                     Sequence, Tuple)
 
@@ -344,11 +345,54 @@ class DispatchStats:
     ``dispatches`` counts group-level op launches — what the fused executor
     pays per forward pass; ``layers`` what the unfused layer walk would
     have paid for the same program.
+
+    Updates go through :meth:`record_group` under an internal lock (one
+    ``DispatchStats`` may be shared by concurrent executors, e.g. hand-
+    pumped replicas in tests); the public integer fields stay plain reads.
+    With :meth:`attach`-ed to a :class:`~repro.obs.MetricsRegistry`, every
+    recorded group also lands in ``exec_*`` counters so graph execution
+    shows up in the same snapshot as the serving tier.
     """
     dispatches: int = 0
     layers: int = 0
     fused_groups: int = 0
     fused_away: int = 0
+    _lock: threading.Lock = dataclass_field(
+        default_factory=threading.Lock, repr=False, compare=False)
+    _registry: Optional[object] = dataclass_field(default=None, repr=False,
+                                                  compare=False)
+
+    def attach(self, registry) -> "DispatchStats":
+        """Mirror future increments into ``exec_*`` registry counters."""
+        registry.counter("exec_dispatches_total",
+                         "Group-level op launches by execute_graph").inc(0)
+        registry.counter("exec_layers_total",
+                         "Layers covered by those launches").inc(0)
+        registry.counter("exec_fused_groups_total",
+                         "Dispatched groups containing a fused epilogue"
+                         ).inc(0)
+        registry.counter("exec_fused_away_total",
+                         "Dispatches saved by fusion (layers - groups)"
+                         ).inc(0)
+        self._registry = registry
+        return self
+
+    def record_group(self, group: FusedGroup) -> None:
+        with self._lock:
+            self.dispatches += 1
+            self.layers += len(group.layers)
+            if group.fused:
+                self.fused_groups += 1
+                self.fused_away += len(group.layers) - 1
+        reg = self._registry
+        if reg is not None:
+            with reg.lock:
+                reg.counter("exec_dispatches_total").inc()
+                reg.counter("exec_layers_total").inc(len(group.layers))
+                if group.fused:
+                    reg.counter("exec_fused_groups_total").inc()
+                    reg.counter("exec_fused_away_total").inc(
+                        len(group.layers) - 1)
 
 
 def execute_graph(graph: GraphProgram, plan: "ExecutionPlan", params,
@@ -369,9 +413,5 @@ def execute_graph(graph: GraphProgram, plan: "ExecutionPlan", params,
         ins = [acts[i] for i in g.inputs]
         acts[g.output] = apply_group(g, plan.for_group(g), params, ins)
         if stats is not None:
-            stats.dispatches += 1
-            stats.layers += len(g.layers)
-            if g.fused:
-                stats.fused_groups += 1
-                stats.fused_away += len(g.layers) - 1
+            stats.record_group(g)
     return acts

@@ -346,6 +346,60 @@ def plan_network(net: NetworkDescription, *,
 
 
 # ---------------------------------------------------------------------------
+# Roofline predictions per dispatch group (cost-model drift, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def predict_group_seconds(net: NetworkDescription, plan: ExecutionPlan, *,
+                          batch: int = 1) -> Dict[str, float]:
+    """Predicted roofline latency per parametric dispatch group, in seconds.
+
+    The prediction is ``max(compute_seconds, memory_seconds)`` of the same
+    :class:`LayerCost` the Rule-3 routing decision was taken on — the fused
+    group cost when the plan carries a graph (epilogue FLOPs at zero added
+    bytes), under the layer's planned mode (operand width + peak-FLOP rate)
+    and the plan's device profile.  Keys are group/anchor names; structural
+    groups (pooling, softmax chains) carry no prediction — the roofline
+    model only speaks for MAC-dominated layers.
+
+    This is the "predicted" column of cost-model drift: obs/drift.py times
+    the identical dispatch units (``apply_group``) and reports the
+    per-group error, closing the loop the paper's cost-driven synthesis
+    assumes but never checks.
+    """
+    shapes = trace_shapes(net)
+    profile = plan.profile
+    if plan.graph is not None:
+        units = [(g.name, g.anchor, len(g.epilogue))
+                 for g in plan.graph.groups]
+    else:
+        units = [(l.name, l, 0) for l in net.layers]
+    out: Dict[str, float] = {}
+    for name, anchor, n_epilogue in units:
+        if anchor.kind not in ("conv", "dense"):
+            continue
+        lp = plan.for_layer(name)
+        dtype = mode_cost_dtype(lp.mode)
+        bpe = _mode_bytes_per_el(lp.mode)
+        if anchor.kind == "conv":
+            cin, h, w = shapes[anchor.inputs[0]]
+            cost = conv_cost(cin, h, w, anchor, batch, bytes_per_el=bpe,
+                             profile=profile, dtype=dtype)
+            ho = _spatial_out(h, anchor.kernel, anchor.stride, anchor.padding)
+            wo = _spatial_out(w, anchor.kernel, anchor.stride, anchor.padding)
+            cost = fused_cost(cost, batch * anchor.out_channels * ho * wo,
+                              n_epilogue)
+        else:
+            in_features = 1
+            for d in shapes[anchor.inputs[0]]:
+                in_features *= d
+            cost = dense_cost(in_features, anchor.out_channels, batch,
+                              bytes_per_el=bpe, profile=profile, dtype=dtype)
+            cost = fused_cost(cost, batch * anchor.out_channels, n_epilogue)
+        out[name] = max(cost.compute_seconds, cost.memory_seconds)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Measured autotune pass
 # ---------------------------------------------------------------------------
 

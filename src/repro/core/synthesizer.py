@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..device import DeviceProfile, resolve_profile
+from ..obs import MetricsRegistry, Tracer
 from .graph import lower_network
 from .layout import LANES, weights_to_map_major
 from .mode_selector import ModeSelectionReport, refine_plan
@@ -120,6 +121,9 @@ class SynthesizedProgram:
     vector_width: int = LANES
     input_dtype: jnp.dtype = jnp.float32
     stage_d_compiles: int = 0
+    #: Cost-model drift (:class:`repro.obs.drift.DriftReport`) — attached
+    #: by :func:`repro.obs.measure_drift`; printed by :meth:`report`.
+    drift: Optional[object] = field(default=None, repr=False)
     _infer: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = \
         field(default=None, repr=False)
     _params_digest: Optional[str] = field(default=None, repr=False)
@@ -207,6 +211,8 @@ class SynthesizedProgram:
         if self.plan.graph is not None:
             lines.append("fusion:")
             lines.append("  " + self.plan.graph.report().replace("\n", "\n  "))
+        if self.drift is not None:
+            lines.append(self.drift.table())    # carries its own header
         return "\n".join(lines)
 
 
@@ -356,7 +362,10 @@ def synthesize(net: NetworkDescription,
                autotune_input: Optional[jnp.ndarray] = None,
                max_iterations: int = MAX_SYNTHESIS_ITERATIONS,
                forced_mode: Optional[ComputeMode] = None,
-               fuse: bool = True) -> SynthesizedProgram:
+               fuse: bool = True,
+               tracer: Optional[Tracer] = None,
+               registry: Optional[MetricsRegistry] = None
+               ) -> SynthesizedProgram:
     """Run the full Cappuccino pipeline and return the synthesized program.
 
     Stage A emits an :class:`ExecutionPlan`: pass ``plan=`` to supply one,
@@ -395,10 +404,23 @@ def synthesize(net: NetworkDescription,
     per-layer measurements on ``autotune_input`` (or the validation
     images); inside the loop, so timings are (re)taken under the final
     Stage-C modes.
+
+    ``tracer=`` records the pipeline as nested ``synthesis.*`` spans
+    (Stage-A planning, each fixed-point iteration with its autotune and
+    Stage-C probe, the validation gate and its demotion events);
+    ``registry=`` accumulates ``synthesis_*`` counters.  Both default to
+    off — synthesis pays nothing unless observed (DESIGN.md §12).
     """
     t0 = time.time()
     if max_iterations < 1:
         raise ValueError(f"max_iterations must be >= 1, got {max_iterations}")
+    _t = tracer if tracer is not None else Tracer(enabled=False)
+
+    def _count(name: str, amount: float = 1.0, help: str = "") -> None:
+        if registry is not None:
+            registry.counter(name, help).inc(amount)
+
+    _count("synthesis_runs_total", 1, "synthesize() invocations")
 
     # Device selection: the target profile flows into the planner config
     # (cost rules) and every plan built here (fingerprint identity).
@@ -429,8 +451,9 @@ def synthesize(net: NetworkDescription,
     # below operates on the fused program.  A supplied plan= keeps its own
     # grouping.
     if plan is None:
-        graph = lower_network(net) if fuse else None
-        plan = plan_network(net, config=planner_config, graph=graph)
+        with _t.span("synthesis.stage_a_plan", net=net.name, fuse=fuse):
+            graph = lower_network(net) if fuse else None
+            plan = plan_network(net, config=planner_config, graph=graph)
     tune_x = None
     if autotune:
         tune_x = autotune_input if autotune_input is not None else \
@@ -465,7 +488,8 @@ def synthesize(net: NetworkDescription,
         plan = _attach_qparams(_replan(net, plan, modes, planner_config),
                                act_qparams)
         if autotune:
-            plan = autotune_plan(net, params, tune_x, plan)
+            with _t.span("synthesis.autotune", net=net.name):
+                plan = autotune_plan(net, params, tune_x, plan)
         synthesis_report = SynthesisReport(
             converged=True, max_iterations=max_iterations,
             gate_skipped_reason=("forced_mode pins Stage C"
@@ -481,6 +505,8 @@ def synthesize(net: NetworkDescription,
             mode_report=None, synthesis_seconds=time.time() - t0,
             synthesis_report=synthesis_report,
             prepared=_prepare_params(net, params, modes))
+        _count("synthesis_seconds_total", program.synthesis_seconds,
+               "Wall seconds spent inside synthesize()")
         return program
 
     # ---- Fixed-point loop: plan -> mode probe -> re-plan -> re-probe ------
@@ -497,8 +523,12 @@ def synthesize(net: NetworkDescription,
     current = _attach_qparams(plan, act_qparams)
 
     for i in range(1, max_iterations + 1):
+      with _t.span("synthesis.iteration", index=i) as it_span:
+        _count("synthesis_iterations_total", 1,
+               "Fixed-point plan/probe rounds")
         if autotune:
-            current = autotune_plan(net, params, tune_x, current)
+            with _t.span("synthesis.autotune", index=i):
+                current = autotune_plan(net, params, tune_x, current)
         # The all-PRECISE reference is mode-independent but *plan*-
         # dependent (probes run under this round's impl routing), so the
         # warm start only holds while the PRECISE-overlay plan — what the
@@ -506,16 +536,20 @@ def synthesize(net: NetworkDescription,
         ref_fp = current.with_modes(precise_modes).fingerprint()
         if ref_fp != probe_reference_fp:
             probe_reference, probe_reference_fp = None, ref_fp
-        report, probed = refine_plan(current, layer_names, evaluate_plan,
-                                     max_degradation=max_degradation,
-                                     allow_int8=allow_int8,
-                                     reference=probe_reference)
+        with _t.span("synthesis.stage_c_probe", index=i):
+            report, probed = refine_plan(current, layer_names, evaluate_plan,
+                                         max_degradation=max_degradation,
+                                         allow_int8=allow_int8,
+                                         reference=probe_reference)
         probe_reference = report.reference_metric
         modes = report.modes
         probed = _attach_qparams(probed, act_qparams)
         next_plan = _attach_qparams(
             _replan(net, probed, modes, planner_config), act_qparams)
         key = (next_plan.fingerprint(), _modes_key(modes))
+        if it_span is not None:
+            it_span.attrs["fingerprint"] = next_plan.fingerprint()
+            it_span.attrs["evaluations"] = report.evaluations
         synthesis_report.iterations.append(IterationRecord(
             index=i, plan_fingerprint=next_plan.fingerprint(),
             modes=dict(modes), probe_metric=report.final_metric,
@@ -567,6 +601,7 @@ def synthesize(net: NetworkDescription,
     # Reference: the all-PRECISE program, *emitted* (prepared weights,
     # jitted plan dispatch) — the same path the candidate runs, so the
     # all-PRECISE fallback floor is degradation-free by construction.
+    gate_t0 = _t.clock()
     ref_plan = _attach_qparams(
         _replan(net, current, precise_modes, planner_config), act_qparams)
     ref_program = SynthesizedProgram(
@@ -606,11 +641,18 @@ def synthesize(net: NetworkDescription,
         synthesis_report.fallbacks.append(
             f"measured degradation {degradation:.4f} > budget "
             f"{max_degradation:.4f}: demoted {', '.join(changed)}")
+        _count("synthesis_gate_demotions_total", 1,
+               "Validation-gate mode demotion rounds")
+        _t.event("synthesis.gate_demotion", degradation=degradation,
+                 budget=max_degradation, demoted=", ".join(changed))
         cand_modes = demoted
         cand_plan = _attach_qparams(
             _replan(net, cand_plan, cand_modes, planner_config), act_qparams)
 
     synthesis_report.validated = passed
+    _t.record_span("synthesis.validation_gate", gate_t0, _t.clock(),
+                   passed=passed, demotions=len(synthesis_report.fallbacks),
+                   accuracy=acc, reference_accuracy=ref_acc)
     if act_qparams:
         synthesis_report.act_scales = {
             n: float(qp.act_scale) for n, qp in act_qparams.items()
@@ -625,4 +667,6 @@ def synthesize(net: NetworkDescription,
                 f"shipped modes re-measured at {acc:.4f} on the emitted "
                 "path"])
     program.synthesis_seconds = time.time() - t0
+    _count("synthesis_seconds_total", program.synthesis_seconds,
+           "Wall seconds spent inside synthesize()")
     return program

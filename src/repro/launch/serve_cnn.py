@@ -10,7 +10,9 @@ data-parallel :class:`~repro.serving.ReplicaSet` with an open-loop stream
 of ``--requests`` single images at ``--rate`` req/s (0 = back-to-back)
 via :func:`repro.serving.run_offered_load`.  Prints sustained throughput,
 latency percentiles, per-replica warm-up (cold start) times, shed count,
-and the program-cache counters.
+and a metrics snapshot rendered from the tier's registry
+(``repro.obs``).  ``--metrics-out``/``--trace-out`` export the snapshot
+(JSON) and the trace spans (JSONL) for offline analysis.
 """
 from __future__ import annotations
 
@@ -20,6 +22,8 @@ import jax
 
 from repro.cnn import WORKLOADS, init_network_params
 from repro.core import ComputeMode, synthesize
+from repro.obs import (MetricsRegistry, Tracer, render_table,
+                       write_metrics_json, write_trace_jsonl)
 from repro.serving import DISPATCH_POLICIES, ServingConfig, run_offered_load
 
 
@@ -43,13 +47,20 @@ def main():
     ap.add_argument("--mode", default="relaxed",
                     choices=[m.value for m in ComputeMode])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a JSON metrics snapshot here")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write trace spans as JSONL here")
     args = ap.parse_args()
 
     net = WORKLOADS[args.net](scale=args.scale, num_classes=args.classes,
                               input_hw=args.input_hw)
     params = init_network_params(net, jax.random.PRNGKey(args.seed))
     print(f"synthesizing {net.name} ({len(net.layers)} layers)...")
-    program = synthesize(net, params, forced_mode=ComputeMode(args.mode))
+    registry = MetricsRegistry()
+    tracer = Tracer(clock=registry.clock)
+    program = synthesize(net, params, forced_mode=ComputeMode(args.mode),
+                         registry=registry, tracer=tracer)
     print(f"  stages A-C in {program.synthesis_seconds:.2f}s, "
           f"program {program.fingerprint()}")
 
@@ -59,10 +70,10 @@ def main():
                            dispatch=args.dispatch,
                            max_queue_depth=args.max_queue_depth)
     report = run_offered_load(program, requests=args.requests,
-                              rate=args.rate, config=config, seed=args.seed)
+                              rate=args.rate, config=config, seed=args.seed,
+                              registry=registry, tracer=tracer)
 
-    srv, cache, tier = (report.server_stats, report.cache_stats,
-                        report.tier_stats)
+    srv, tier = report.server_stats, report.tier_stats
     print(f"served {report.admitted}/{report.requests} requests "
           f"({report.shed_requests} shed) across {report.replica_count} "
           f"replica(s) in {report.wall_seconds:.3f}s "
@@ -74,8 +85,17 @@ def main():
           f"stolen {tier['stolen_requests']}  peak depth {tier['peak_depth']}")
     warm = ", ".join(f"r{i}={s:.2f}s" for i, s in enumerate(report.warm_seconds))
     print(f"cold start (warm-up): {warm}")
-    print(f"program cache: {cache['stage_d_compiles']:.0f} Stage-D compiles "
-          f"({cache['stage_d_seconds']:.2f}s), hit rate {cache['hit_rate']:.1%}")
+    print("\nmetrics snapshot:")
+    print(render_table(report.registry))
+
+    if args.metrics_out:
+        write_metrics_json(args.metrics_out, report.registry,
+                           meta={"net": net.name, "requests": args.requests,
+                                 "replicas": args.replicas})
+        print(f"\nmetrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        write_trace_jsonl(args.trace_out, report.tracer or tracer)
+        print(f"trace spans -> {args.trace_out}")
 
 
 if __name__ == "__main__":

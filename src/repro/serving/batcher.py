@@ -26,10 +26,17 @@ import threading
 import time
 import warnings
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Any, List, Optional
+from typing import TYPE_CHECKING, Any, Dict, List, Optional
+
+from ..obs import FRACTION_BUCKETS, MetricsRegistry, Tracer
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .config import ServingConfig
+
+#: Why a bucket was released — the label values of
+#: ``serving_batcher_flush_total`` (pre-touched at zero so "no deadline
+#: flushes yet" is a visible series, not an absent one).
+FLUSH_REASONS = ("depth", "deadline", "forced")
 
 
 def pow2_bucket(n: int) -> int:
@@ -119,7 +126,10 @@ class Bucket:
 
 class DynamicBatcher:
     def __init__(self, policy: Optional[FlushPolicy] = None, *,
-                 config: "Optional[ServingConfig]" = None):
+                 config: "Optional[ServingConfig]" = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 labels: Optional[Dict[str, object]] = None):
         from .config import ServingConfig
 
         if policy is not None:
@@ -138,12 +148,35 @@ class DynamicBatcher:
         # holding the condition to sleep on it.
         self._lock = threading.RLock()
         self.not_empty = threading.Condition(self._lock)
+        # -- observability (DESIGN.md §12): ``labels`` distinguishes the
+        # batchers of a replica tier inside one shared registry.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        self._labels = {k: str(v) for k, v in (labels or {}).items()}
+        names = tuple(sorted(self._labels))
+        self._depth_gauge = self.registry.gauge(
+            "serving_batcher_queue_depth",
+            "Requests currently queued in the batcher", names)
+        self._flushes = self.registry.counter(
+            "serving_batcher_flush_total",
+            "Released buckets by flush trigger", names + ("reason",))
+        self._occupancy = self.registry.histogram(
+            "serving_batcher_batch_occupancy",
+            "Real requests / bucket slots per released bucket",
+            names, buckets=FRACTION_BUCKETS)
+        self._depth_gauge.set(0, **self._labels)
+        for reason in FLUSH_REASONS:
+            self._flushes.inc(0, reason=reason, **self._labels)
+
+    def _observe_depth_locked(self) -> None:
+        self._depth_gauge.set(len(self._queue), **self._labels)
 
     def submit(self, image: Any) -> ServingFuture:
         fut = ServingFuture()
         req = Request(image=image, future=fut, enqueue_time=time.perf_counter())
         with self.not_empty:
             self._queue.append(req)
+            self._observe_depth_locked()
             self.not_empty.notify()
         return fut
 
@@ -190,6 +223,7 @@ class DynamicBatcher:
             if n == 0:
                 return []
             stolen, self._queue = self._queue[-n:], self._queue[:-n]
+            self._observe_depth_locked()
             return stolen
 
     # -- bucket release -----------------------------------------------------
@@ -200,6 +234,26 @@ class DynamicBatcher:
             t = now if now is not None else time.perf_counter()
             if not self._queue or not (force or self._ready_locked(t)):
                 return None
+            # Attribute the flush to the strongest trigger that fired:
+            # depth beats deadline (a full queue flushes regardless of
+            # age), and "forced" only when no organic trigger had fired.
+            if len(self._queue) >= self.policy.depth_trigger:
+                reason = "depth"
+            elif t - self._queue[0].enqueue_time >= self.policy.max_delay_s:
+                reason = "deadline"
+            else:
+                reason = "forced"
             n = min(len(self._queue), self.policy.max_batch)
             reqs, self._queue = self._queue[:n], self._queue[n:]
-            return Bucket(requests=reqs, batch=pow2_bucket(n))
+            self._observe_depth_locked()
+            bucket = Bucket(requests=reqs, batch=pow2_bucket(n))
+        self._flushes.inc(reason=reason, **self._labels)
+        self._occupancy.observe(len(reqs) / bucket.batch, **self._labels)
+        if self.tracer is not None:
+            # Retroactive: the enqueue→flush wait of this bucket, anchored
+            # at its oldest request (same perf_counter base as the tracer).
+            self.tracer.record_span(
+                "serve.batch_wait", reqs[0].enqueue_time, t,
+                reason=reason, batch=bucket.batch, requests=len(reqs),
+                **self._labels)
+        return bucket

@@ -61,7 +61,10 @@ class ServingEngine:
         assert s + max_new_tokens <= self.max_context, "context overflow"
         t0 = time.perf_counter()
         logits, caches = self._prefill(self.params, prompts, aux=aux)
-        logits.block_until_ready()
+        # Sync the whole prefill output, not just logits: cache writes are
+        # dispatched asynchronously too, and unblocked work silently
+        # migrates into the decode window's measurement.
+        jax.block_until_ready((logits, caches))
         t_prefill = time.perf_counter() - t0
 
         out: List[np.ndarray] = []
@@ -73,6 +76,7 @@ class ServingEngine:
         # (or across generate() calls) never duplicates our draws.
         step_key = (None if key is None else jax.random.fold_in(key, 0))
         tok = self._sample(logits, temperature, step_key)
+        tok.block_until_ready()     # first-token sampling is prefill-side
         t0 = time.perf_counter()
         for i in range(max_new_tokens):
             out.append(np.asarray(tok))
@@ -88,7 +92,9 @@ class ServingEngine:
                         else jax.random.fold_in(key, i + 1))
             tok = self._sample(logits[:, None] if logits.ndim == 2 else logits,
                                temperature, step_key)
-        jax.block_until_ready(caches)
+        # Sync everything the loop dispatched (the EOS early-exit can leave
+        # an unconsumed sampled token in flight alongside cache updates).
+        jax.block_until_ready((caches, tok))
         t_decode = time.perf_counter() - t0
         return GenerationResult(tokens=np.concatenate(out, axis=1),
                                 prefill_seconds=t_prefill,

@@ -22,9 +22,11 @@ import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
+import jax
 import numpy as np
 
 from ..core.synthesizer import SynthesizedProgram
+from ..obs import MetricsRegistry, Tracer
 from .batcher import FlushPolicy
 from .config import ServingConfig
 from .dispatch import LoadShedError
@@ -44,12 +46,16 @@ def percentile(sorted_vals: List[float], q: float) -> float:
 def warm_buckets(cache: ProgramCache, program: SynthesizedProgram,
                  max_batch: int) -> float:
     """Compile Stage D for every bucket the batcher can release (1, 2, ...,
-    max_batch) so no XLA compile lands inside a measured window.  Returns
-    the wall time spent warming."""
+    max_batch) and run each compiled executable once on zeros, so neither
+    an XLA compile nor a first-execution cost (allocator growth, transfer
+    warmup) lands inside a measured window.  Returns the wall time spent
+    warming."""
     t0 = time.perf_counter()
     b = 1
     while b <= max_batch:
-        cache.get_or_build(program, b)
+        fn = cache.get_or_build(program, b)
+        x = np.zeros((b, *program.net.input_shape), np.float32)
+        jax.block_until_ready(fn(x))
         b *= 2
     return time.perf_counter() - t0
 
@@ -87,6 +93,8 @@ class LoadReport:
     replica_count: int = 1
     tier_stats: Dict[str, object] = field(default_factory=dict)
     warm_seconds: List[float] = field(default_factory=list)  # per replica
+    registry: Optional[MetricsRegistry] = None   # the tier's metrics sink
+    tracer: Optional[Tracer] = None              # the tier's span sink
 
     @property
     def sustained_per_s(self) -> float:
@@ -129,13 +137,18 @@ def run_offered_load(program: Union[SynthesizedProgram, ReplicaSet], *,
                      policy: Optional[FlushPolicy] = None,
                      cache: Optional[ProgramCache] = None,
                      seed: int = 0, warm: bool = True,
-                     timeout_s: float = 300.0) -> LoadReport:
+                     timeout_s: float = 300.0,
+                     registry: Optional[MetricsRegistry] = None,
+                     tracer: Optional[Tracer] = None) -> LoadReport:
     """Drive ``requests`` single images through a fresh serving tier.
 
     ``program`` is a single :class:`SynthesizedProgram` (replicated
     ``config.replicas`` times) or a pre-built :class:`ReplicaSet` (the
     device-mesh case).  ``policy=`` is the deprecated pre-``ServingConfig``
-    bucket-policy spelling.
+    bucket-policy spelling.  ``registry=``/``tracer=`` hand the freshly
+    built tier an observability sink (ignored for a pre-built ReplicaSet,
+    which already carries its own); the tier's registry is always exposed
+    on ``LoadReport.registry``.
     """
     if policy is not None:
         if config is not None:
@@ -155,7 +168,7 @@ def run_offered_load(program: Union[SynthesizedProgram, ReplicaSet], *,
         net = tier.replicas[0].program.net
     else:
         tier = ReplicaSet(program, config=config or ServingConfig(),
-                          cache=cache)
+                          cache=cache, registry=registry, tracer=tracer)
         net = program.net
 
     warm_seconds = warm_replicas(tier) if warm else []
@@ -192,4 +205,6 @@ def run_offered_load(program: Union[SynthesizedProgram, ReplicaSet], *,
                        for k, v in srv["bucket_counts"].items()},
         replica_count=len(tier.replicas),
         tier_stats=tier_stats,
-        warm_seconds=warm_seconds)
+        warm_seconds=warm_seconds,
+        registry=tier.registry,
+        tracer=tier.tracer)

@@ -25,17 +25,22 @@ core/synthesizer.py), so a gate fallback that demotes modes changes the
 fingerprint and can never alias a pre-fallback executable.
 
 ``CacheStats`` records hits/misses/compiles — the round-trip acceptance
-test and the serving benchmark both read them.
+test and the serving benchmark both read them.  Since the observability
+PR (DESIGN.md §12) it is a thin shim over ``serving_cache_*`` counters in
+a :class:`~repro.obs.MetricsRegistry`: the historical integer-attribute
+surface (``stats.hits`` etc.) stays, but every increment happens under
+the registry's lock and lands in the same registry a tier-wide snapshot
+or Prometheus scrape reads.
 """
 from __future__ import annotations
 
 import threading
 import warnings
 from collections import OrderedDict
-from dataclasses import dataclass
 from typing import TYPE_CHECKING, Dict, Optional, Tuple
 
 from ..core.synthesizer import BatchProgram, SynthesizedProgram
+from ..obs import MetricsRegistry, Tracer
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .config import ServingConfig
@@ -43,13 +48,77 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 CacheKey = Tuple[str, int, str]          # (network, bucket, program fp)
 
 
-@dataclass
 class CacheStats:
-    hits: int = 0
-    misses: int = 0
-    stage_d_compiles: int = 0
-    stage_d_seconds: float = 0.0
-    evictions: int = 0
+    """Registry-backed cache counters with the historical read surface.
+
+    Mutation goes through :meth:`hit` / :meth:`miss` / :meth:`compiled` /
+    :meth:`evicted` (each a registry-locked counter increment); reads keep
+    the original dataclass attribute names so every existing consumer —
+    tests, ``loadgen``, the serving benchmark's ``as_dict()`` schema —
+    sees the exact same integers, now torn-read-free under concurrent
+    ``pump()``-mode replicas.
+    """
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 **labels: object):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._labels = {k: str(v) for k, v in labels.items()}
+        names = tuple(sorted(self._labels))
+        reg = self.registry
+        self._hits = reg.counter(
+            "serving_cache_hits_total",
+            "Stage-D executable cache hits", names)
+        self._misses = reg.counter(
+            "serving_cache_misses_total",
+            "Stage-D executable cache misses", names)
+        self._compiles = reg.counter(
+            "serving_cache_stage_d_compiles_total",
+            "Stage-D AOT compiles triggered by cache misses", names)
+        self._compile_seconds = reg.counter(
+            "serving_cache_stage_d_seconds_total",
+            "Wall seconds spent in Stage-D AOT compiles", names)
+        self._evictions = reg.counter(
+            "serving_cache_evictions_total",
+            "Compiled executables evicted by the LRU bound", names)
+        for c in (self._hits, self._misses, self._compiles,
+                  self._compile_seconds, self._evictions):
+            c.inc(0, **self._labels)             # materialize zero series
+
+    # -- mutation (registry-locked) -----------------------------------------
+    def hit(self) -> None:
+        self._hits.inc(**self._labels)
+
+    def miss(self) -> None:
+        self._misses.inc(**self._labels)
+
+    def compiled(self, seconds: float) -> None:
+        with self.registry.lock:                 # one atomic pair
+            self._compiles.inc(**self._labels)
+            self._compile_seconds.inc(seconds, **self._labels)
+
+    def evicted(self) -> None:
+        self._evictions.inc(**self._labels)
+
+    # -- historical read surface --------------------------------------------
+    @property
+    def hits(self) -> int:
+        return int(self._hits.value(**self._labels))
+
+    @property
+    def misses(self) -> int:
+        return int(self._misses.value(**self._labels))
+
+    @property
+    def stage_d_compiles(self) -> int:
+        return int(self._compiles.value(**self._labels))
+
+    @property
+    def stage_d_seconds(self) -> float:
+        return self._compile_seconds.value(**self._labels)
+
+    @property
+    def evictions(self) -> int:
+        return int(self._evictions.value(**self._labels))
 
     @property
     def requests(self) -> int:
@@ -78,7 +147,9 @@ class ProgramCache:
     """
 
     def __init__(self, max_entries: Optional[int] = None, *,
-                 config: "Optional[ServingConfig]" = None):
+                 config: "Optional[ServingConfig]" = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         from .config import ServingConfig
 
         if max_entries is not None:
@@ -94,7 +165,12 @@ class ProgramCache:
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self.max_entries = max_entries
-        self.stats = CacheStats()
+        self.stats = CacheStats(registry=registry)
+        #: The registry every ``serving_cache_*`` series lives in — a tier
+        #: that shares this cache (ReplicaSet) adopts it for its own
+        #: metrics so one snapshot covers cache + batcher + dispatch.
+        self.registry = self.stats.registry
+        self.tracer = tracer
         # One cache may back several servers' dispatch threads (shared
         # compiled buckets across replicas) — guard all mutation.  Compiles
         # run under the lock: slower first hit, but a bucket is never
@@ -141,16 +217,22 @@ class ProgramCache:
             hit = self._compiled.get(key)
             if hit is not None:
                 self._compiled.move_to_end(key)
-                self.stats.hits += 1
+                self.stats.hit()
                 return hit
-            self.stats.misses += 1
-            compiled = program.for_batch(batch)
-            self.stats.stage_d_compiles += 1
-            self.stats.stage_d_seconds += compiled.compile_seconds
+            self.stats.miss()
+            if self.tracer is not None:
+                with self.tracer.span("synthesis.stage_d_compile",
+                                      net=program.net.name, batch=batch) as s:
+                    compiled = program.for_batch(batch)
+                    if s is not None:
+                        s.attrs["compile_seconds"] = compiled.compile_seconds
+            else:
+                compiled = program.for_batch(batch)
+            self.stats.compiled(compiled.compile_seconds)
             self._compiled[key] = compiled
             while len(self._compiled) > self.max_entries:
                 self._compiled.popitem(last=False)
-                self.stats.evictions += 1
+                self.stats.evicted()
             return compiled
 
     def __len__(self) -> int:

@@ -38,6 +38,7 @@ import time
 from typing import Dict, List, Optional, Sequence, Union
 
 from ..core.synthesizer import SynthesizedProgram
+from ..obs import MetricsRegistry, Tracer
 from .batcher import Bucket, ServingFuture, pow2_bucket
 from .config import ServingConfig
 from .dispatch import DispatchPolicy, LoadShedError, resolve_dispatch_policy
@@ -54,10 +55,14 @@ class Replica:
     """
 
     def __init__(self, index: int, program: SynthesizedProgram,
-                 config: ServingConfig, cache: ProgramCache):
+                 config: ServingConfig, cache: ProgramCache, *,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         self.index = index
         self.program = program
-        self.server = SynthesisServer(program, config=config, cache=cache)
+        self.server = SynthesisServer(program, config=config, cache=cache,
+                                      registry=registry, tracer=tracer,
+                                      labels={"replica": index})
         self.stolen_requests = 0        # requests this replica stole
         self.peak_depth = 0             # max queue depth ever admitted to
         self.warm_seconds: Optional[float] = None
@@ -89,7 +94,9 @@ class ReplicaSet:
     def __init__(self, programs: Union[SynthesizedProgram,
                                        Sequence[SynthesizedProgram]], *,
                  config: Optional[ServingConfig] = None,
-                 cache: Optional[ProgramCache] = None):
+                 cache: Optional[ProgramCache] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
         # Anything that isn't a sequence is one program to replicate
         # (duck-typed rather than isinstance so tests can serve stubs).
         if not isinstance(programs, (list, tuple)):
@@ -118,13 +125,29 @@ class ReplicaSet:
 
         self.config = config
         self.policy: DispatchPolicy = resolve_dispatch_policy(config.dispatch)
+        # One registry + tracer for the whole tier (DESIGN.md §12): the
+        # shared cache, every replica's server, and every batcher write
+        # into them, so one snapshot / one JSONL file covers the tier.
         self.cache = cache if cache is not None else \
-            ProgramCache(config=config)
+            ProgramCache(config=config, registry=registry, tracer=tracer)
+        self.registry = registry if registry is not None else \
+            self.cache.registry
+        self.tracer = tracer if tracer is not None else self.cache.tracer
         self.replicas: List[Replica] = [
-            Replica(i, p, config, self.cache)
+            Replica(i, p, config, self.cache,
+                    registry=self.registry, tracer=self.tracer)
             for i, p in enumerate(programs)]
-        self.shed_requests = 0
-        self.submitted = 0
+        self._submitted = self.registry.counter(
+            "serving_tier_submitted_total",
+            "Requests admitted by the tier front door")
+        self._shed = self.registry.counter(
+            "serving_tier_shed_total",
+            "Requests rejected with LoadShedError (all queues full)")
+        self._stolen = self.registry.counter(
+            "serving_tier_stolen_total",
+            "Requests migrated between replicas by work stealing")
+        for c in (self._submitted, self._shed, self._stolen):
+            c.inc(0)                             # materialize zero series
         # Admission is serialized: depths are observed and the request
         # enqueued under one lock, so the per-replica bound is strict (the
         # dispatch side only ever shrinks queues).
@@ -132,6 +155,15 @@ class ReplicaSet:
         self._rr = 0
         self._threads: List[threading.Thread] = []
         self._stopping = threading.Event()
+
+    # Historical integer surface over the registry-backed tier counters.
+    @property
+    def submitted(self) -> int:
+        return int(self._submitted.value())
+
+    @property
+    def shed_requests(self) -> int:
+        return int(self._shed.value())
 
     @classmethod
     def for_devices(cls, net, params,
@@ -175,11 +207,14 @@ class ReplicaSet:
                 # shed while a peer has room).
                 idx = min(range(len(depths)), key=lambda i: (depths[i], i))
                 if depths[idx] >= bound:
-                    self.shed_requests += 1
+                    self._shed.inc()
+                    if self.tracer is not None:
+                        self.tracer.event("serve.shed",
+                                          depths=repr(depths), bound=bound)
                     raise LoadShedError(depths, bound)
             replica = self.replicas[idx]
             fut = replica.server.submit(image)
-            self.submitted += 1
+            self._submitted.inc()
             replica.peak_depth = max(replica.peak_depth, depths[idx] + 1)
             return fut
 
@@ -211,6 +246,10 @@ class ReplicaSet:
         if not stolen:
             return None
         self.replicas[thief].stolen_requests += len(stolen)
+        self._stolen.inc(len(stolen))
+        if self.tracer is not None:
+            self.tracer.event("serve.steal", thief=thief, victim=victim,
+                              requests=len(stolen))
         return Bucket(requests=stolen, batch=pow2_bucket(len(stolen)))
 
     def _take_for(self, i: int, force: bool = False) -> Optional[Bucket]:

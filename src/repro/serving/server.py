@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.synthesizer import SynthesizedProgram
+from ..obs import MetricsRegistry, Tracer
 from .batcher import Bucket, DynamicBatcher, FlushPolicy, ServingFuture
 from .config import ServingConfig
 from .program_cache import ProgramCache
@@ -79,7 +80,10 @@ class SynthesisServer:
     def __init__(self, program: SynthesizedProgram, *,
                  config: Optional[ServingConfig] = None,
                  cache: Optional[ProgramCache] = None,
-                 policy: Optional[FlushPolicy] = None):
+                 policy: Optional[FlushPolicy] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 labels: Optional[Dict[str, object]] = None):
         if policy is not None:
             if config is not None:
                 raise ValueError("pass either config= or the deprecated "
@@ -92,10 +96,24 @@ class SynthesisServer:
         self.config = config or ServingConfig()
         self.program = program
         self.cache = cache if cache is not None else \
-            ProgramCache(config=self.config)
+            ProgramCache(config=self.config, registry=registry, tracer=tracer)
         self.policy = self.config.flush_policy()
         self.cache.admit(program)
-        self.batcher = DynamicBatcher(config=self.config)
+        # One registry per serving tier: an explicit registry= wins,
+        # otherwise the cache's — so a server sharing a ProgramCache with
+        # its peers (ReplicaSet) lands cache, batcher, and dispatch series
+        # in the same snapshot without any extra plumbing.
+        self.registry = registry if registry is not None else \
+            self.cache.registry
+        self.tracer = tracer if tracer is not None else self.cache.tracer
+        self._labels = {k: str(v) for k, v in (labels or {}).items()}
+        self.batcher = DynamicBatcher(config=self.config,
+                                      registry=self.registry,
+                                      tracer=self.tracer, labels=self._labels)
+        self._dispatch_seconds = self.registry.histogram(
+            "serving_dispatch_seconds",
+            "Wall time of one bucket dispatch (pad + execute + scatter)",
+            tuple(sorted(self._labels)))
         self.stats = ServerStats()
         self._stats_lock = threading.Lock()   # submit() races the loop
         self._thread: Optional[threading.Thread] = None
@@ -132,6 +150,12 @@ class SynthesisServer:
         stole) itself; the bucket need not come from this server's own
         batcher — work stealing dispatches a peer's requests here.
         """
+        t0 = self.registry.clock()
+        span_cm = self.tracer.span("serve.dispatch", batch=bucket.batch,
+                                   requests=len(bucket.requests),
+                                   **self._labels) \
+            if self.tracer is not None else None
+        span = span_cm.__enter__() if span_cm is not None else None
         try:
             compiled = self.cache.get_or_build(self.program, bucket.batch)
             x = jnp.stack([jnp.asarray(r.image, self.program.input_dtype)
@@ -140,6 +164,8 @@ class SynthesisServer:
                 pad = jnp.zeros((bucket.padding, *x.shape[1:]), x.dtype)
                 x = jnp.concatenate([x, pad])
             out = np.asarray(jax.block_until_ready(compiled(x)))
+            self._dispatch_seconds.observe(self.registry.clock() - t0,
+                                           **self._labels)
             with self._stats_lock:
                 self.stats.batches += 1
                 self.stats.padded_slots += bucket.padding
@@ -150,10 +176,15 @@ class SynthesisServer:
                 with self._stats_lock:
                     self.stats.completed += 1
         except Exception as exc:  # surface the failure on every request
+            if span is not None:
+                span.attrs["error"] = True
             for req in bucket.requests:
                 req.future.set_exception(exc)
                 with self._stats_lock:
                     self.stats.failed += 1
+        finally:
+            if span_cm is not None:
+                span_cm.__exit__(None, None, None)
 
     def pump(self, force: bool = False) -> int:
         """Dispatch at most one bucket now; returns requests served."""

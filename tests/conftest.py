@@ -141,3 +141,20 @@ try:
     import hypothesis  # noqa: F401  (the real package, when available)
 except ModuleNotFoundError:
     _install_hypothesis_stub()
+
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_jax_compile_state():
+    """Drop JAX's in-process compile caches after every test module.
+
+    The full suite compiles hundreds of distinct executables in one
+    process; by the time the property suite reaches the int8 kernel
+    parity tests, the accumulated jaxlib state can segfault XLA's CPU
+    ``backend_compile`` (the identical tests pass in a fresh process).
+    Clearing per module bounds that state at a small recompile cost.
+    """
+    yield
+    jax.clear_caches()

@@ -1,0 +1,121 @@
+"""No-lost-updates contract of the registry-backed stats ledgers.
+
+``CacheStats`` and ``DispatchStats`` became thin shims over
+``repro.obs.MetricsRegistry`` counters (DESIGN.md §12); their historical
+int-attribute read surface must keep summing exactly under concurrent
+mutation — N threads x M increments must land N*M, never fewer.  Runs
+registry-only (no jax compile in the loop) so the race window is tight.
+"""
+import threading
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core.graph import DispatchStats
+from repro.obs import MetricsRegistry
+from repro.serving.program_cache import CacheStats
+
+N_THREADS = 8
+N_OPS = 500
+
+
+def _race(worker, n_threads=N_THREADS):
+    barrier = threading.Barrier(n_threads)
+    errors = []
+
+    def run(i):
+        try:
+            barrier.wait(timeout=30.0)
+            worker(i)
+        except Exception as e:                    # surface, don't deadlock
+            errors.append((i, e))
+
+    threads = [threading.Thread(target=run, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+    assert not errors, errors
+    assert not any(t.is_alive() for t in threads)
+
+
+def test_cache_stats_no_lost_updates():
+    stats = CacheStats()
+
+    def worker(i):
+        for _ in range(N_OPS):
+            stats.hit()
+            stats.miss()
+            stats.compiled(0.001)
+            stats.evicted()
+
+    _race(worker)
+    assert stats.hits == N_THREADS * N_OPS
+    assert stats.misses == N_THREADS * N_OPS
+    assert stats.requests == 2 * N_THREADS * N_OPS
+    assert stats.stage_d_compiles == N_THREADS * N_OPS
+    assert stats.evictions == N_THREADS * N_OPS
+    assert stats.stage_d_seconds == pytest.approx(0.001 * N_THREADS * N_OPS)
+    assert stats.hit_rate == pytest.approx(0.5)
+
+
+def test_cache_stats_shared_registry_keeps_series_apart():
+    """Two ledgers on one registry (the ReplicaSet shape) must not bleed
+    into each other's label sets while racing."""
+    registry = MetricsRegistry()
+    a = CacheStats(registry=registry, tier="a")
+    b = CacheStats(registry=registry, tier="b")
+
+    def worker(i):
+        mine = a if i % 2 == 0 else b
+        for _ in range(N_OPS):
+            mine.hit()
+
+    _race(worker)
+    assert a.hits == (N_THREADS // 2) * N_OPS
+    assert b.hits == (N_THREADS // 2) * N_OPS
+    hits = registry.counter("serving_cache_hits_total",
+                            labelnames=("tier",))
+    assert hits.value(tier="a") == a.hits
+    assert hits.value(tier="b") == b.hits
+
+
+def test_dispatch_stats_no_lost_updates_attached():
+    """record_group under contention: both the plain int fields and the
+    mirrored exec_* registry counters must agree with N*M."""
+    registry = MetricsRegistry()
+    stats = DispatchStats().attach(registry)
+    fused = SimpleNamespace(layers=("conv", "relu"), fused=True)
+    plain = SimpleNamespace(layers=("dense",), fused=False)
+
+    def worker(i):
+        for _ in range(N_OPS):
+            stats.record_group(fused)
+            stats.record_group(plain)
+
+    _race(worker)
+    total = 2 * N_THREADS * N_OPS
+    assert stats.dispatches == total
+    assert stats.layers == 3 * N_THREADS * N_OPS
+    assert stats.fused_groups == N_THREADS * N_OPS
+    assert stats.fused_away == N_THREADS * N_OPS
+    assert registry.counter("exec_dispatches_total").value() == total
+    assert registry.counter("exec_layers_total").value() \
+        == 3 * N_THREADS * N_OPS
+    assert registry.counter("exec_fused_away_total").value() \
+        == N_THREADS * N_OPS
+
+
+def test_registry_histogram_no_lost_observations():
+    registry = MetricsRegistry()
+    h = registry.histogram("t_seconds", "test", buckets=(0.1, 1.0))
+
+    def worker(i):
+        for k in range(N_OPS):
+            h.observe(0.05 if k % 2 == 0 else 5.0)
+
+    _race(worker)
+    assert h.count_of() == N_THREADS * N_OPS
+    assert h.sum_of() == pytest.approx(
+        N_THREADS * (N_OPS // 2) * 0.05 + N_THREADS * (N_OPS // 2) * 5.0)
