@@ -44,6 +44,10 @@ REQUIRED_METRICS: Dict[str, List[str]] = {
     "obs_overhead": ["overhead_pct", "enabled_ms_per_request",
                      "disabled_ms_per_request",
                      "drift_mean_abs_error_pct", "drift_groups"],
+    "warmstart_speedup": ["cold_start_seconds", "warm_start_seconds",
+                          "warm_stage_d_compiles", "speedup",
+                          "warm_synthesis_iterations",
+                          "plan_only_fallback"],
 }
 
 

@@ -13,7 +13,8 @@ def main() -> None:
     fast = "--fast" in sys.argv
     reps = 4 if fast else 8
     from . import (device_sweep, fusion_speedup, int8_speedup, mode_selection,
-                   table1_speedup, table2_energy_proxy, table3_vs_klp_flp)
+                   table1_speedup, table2_energy_proxy, table3_vs_klp_flp,
+                   warmstart_speedup)
     suites = [
         ("table1_speedup", lambda: table1_speedup.run(reps=reps)),
         ("table2_energy_proxy", lambda: table2_energy_proxy.run(reps=reps)),
@@ -22,6 +23,7 @@ def main() -> None:
         ("device_sweep", lambda: device_sweep.run(reps=reps)),
         ("fusion_speedup", lambda: fusion_speedup.run(reps=reps)),
         ("int8_speedup", lambda: int8_speedup.run(reps=reps)),
+        ("warmstart_speedup", warmstart_speedup.rows),
     ]
     try:
         from . import dryrun_summary, roofline

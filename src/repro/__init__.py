@@ -12,7 +12,9 @@ user composes the pipeline from:
 - ``repro.serving``  the serving tier: batching, program cache, the
                      data-parallel ``ReplicaSet`` (DESIGN.md §6/§11);
 - ``repro.obs``      observability: metrics registry, trace spans,
-                     exporters, cost-model drift (DESIGN.md §12).
+                     exporters, cost-model drift (DESIGN.md §12);
+- ``repro.artifacts`` persistent program artifacts: the on-disk store
+                     behind zero-synthesis warm starts (DESIGN.md §13).
 
 Subpackages are imported lazily so ``import repro`` stays cheap — nothing
 JAX-heavy runs until a subpackage is touched.  Anything not reachable
@@ -23,7 +25,7 @@ from __future__ import annotations
 
 import importlib
 
-__all__ = ["cnn", "core", "device", "kernels", "obs", "serving"]
+__all__ = ["artifacts", "cnn", "core", "device", "kernels", "obs", "serving"]
 
 
 def __getattr__(name: str):

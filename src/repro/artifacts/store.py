@@ -1,0 +1,512 @@
+"""ArtifactStore: persistent program artifacts, zero-synthesis warm starts.
+
+Cappuccino's thesis is *synthesize once, execute many times* — but a
+process restart used to re-pay the whole fixed-point loop and every
+Stage-D AOT compile.  The store makes the synthesis artifact durable:
+
+  programs/<fingerprint>/      one complete program artifact
+    manifest.json              schema version + content digests (written
+                               LAST — a directory without a valid manifest
+                               is an unfinished write, never a torn read)
+    program.json               plan + graph + modes + audit reports (codec)
+    weights.json, weights.bin  Stage B's prepared parameters, raw bytes
+    exec_b<N>.bin/.json        jax.export blob per Stage-D batch bucket +
+                               its stamp (sha256, jaxlib, platforms)
+  index/<request_key>.json     synthesis-request key -> fingerprint, so
+                               ``synthesize(artifact_store=...)`` can find
+                               the converged artifact *before* running the
+                               loop that would compute its fingerprint
+
+Identity and integrity rules (DESIGN.md §13):
+
+* The artifact key is the **converged program fingerprint** — plan
+  dispatch content (impl/policy/mode/u/vmem-budget/qparams per layer),
+  graph fusion digest, :meth:`DeviceProfile.identity`, and the
+  prepared-weights digest.  Device-distinct programs can never alias, the
+  same invariant the in-memory ProgramCache keys on.
+* Every file is written atomically (temp file in the same directory +
+  ``os.replace``), so concurrent writers racing on one fingerprint
+  produce exactly one winner and readers never observe partial content.
+* A loaded program is **self-validated**: its fingerprint is *recomputed*
+  from the decoded plan and weights and compared to the directory's name
+  and the manifest's claim.  sha256 digests catch bit rot early; the
+  recomputed fingerprint catches semantic tampering (an edited mode, a
+  swapped weight) that a size-preserving write could sneak past nothing
+  else.  Any mismatch — or an unknown ``schema_version`` — rejects the
+  artifact, counts ``artifact_invalid_total``, and behaves as a miss:
+  the caller falls back to a clean cold path, never a crash and never a
+  silently wrong program.
+* Executable blobs additionally carry a jaxlib + lowering-platform stamp;
+  a mismatched stamp is not corruption but a foreign environment, so the
+  blob is skipped (plan-only fallback: Stages A–C hydrate, Stage D
+  recompiles) without counting invalid.
+
+Observability: ``artifact_{hits,misses,writes,invalid}_total`` counters
+(labeled ``kind=program|executable``) and ``serve.artifact_hydrate``
+trace spans, in whatever registry/tracer the constructor is handed — a
+ReplicaSet passes its tier registry so one snapshot covers cache *and*
+store behavior.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, TYPE_CHECKING
+
+import numpy as np
+
+from ..obs import MetricsRegistry, Tracer
+from . import codec
+from .codec import ArtifactCodecError
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    import jax.numpy as jnp
+
+    from ..core.network import NetworkDescription
+    from ..core.synthesizer import BatchProgram, SynthesizedProgram
+
+#: Version tag of the on-disk layout; bump on any incompatible change.
+#: Unknown versions are rejected loudly (counted invalid), mirroring the
+#: device-profile JSON precedent (device/profile.py).
+ARTIFACT_SCHEMA_VERSION = 1
+
+_PROGRAM_FILES = ("program.json", "weights.json", "weights.bin")
+
+
+class ArtifactError(ValueError):
+    """An artifact is missing, malformed, or fails integrity checks."""
+
+
+def _sha256(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    """Temp file in the target directory + rename: readers see either the
+    old content or the new, never a torn write; racing writers produce
+    exactly one winner (the last rename)."""
+    d = os.path.dirname(path)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp-",
+                               suffix=os.path.basename(path))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+def _atomic_write_json(path: str, doc: Dict[str, Any]) -> None:
+    _atomic_write(path, (json.dumps(doc, indent=2, sort_keys=True) + "\n")
+                  .encode())
+
+
+def _read_json(path: str) -> Any:
+    with open(path, "rb") as f:
+        raw = f.read()
+    try:
+        return json.loads(raw.decode())
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ArtifactError(f"{path}: not valid JSON ({e})") from None
+
+
+# ---------------------------------------------------------------------------
+# Synthesis-request keys (the index that resolves the chicken-and-egg:
+# the artifact key is the *converged* fingerprint, which only synthesis
+# knows — so requests are keyed by their inputs).
+# ---------------------------------------------------------------------------
+
+def _hash_arrays(h: "hashlib._Hash", tree: Any) -> None:
+    import jax
+
+    for leaf in jax.tree_util.tree_leaves(tree):
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+
+
+def synthesis_request_key(net: "NetworkDescription", params: Any, *,
+                          validation: Any = None,
+                          device_identity: str = "",
+                          max_degradation: float = 0.0,
+                          allow_int8: bool = False,
+                          forced_mode: Any = None,
+                          fuse: bool = True,
+                          autotune: bool = False,
+                          max_iterations: int = 0) -> str:
+    """Digest of everything that determines what ``synthesize`` returns.
+
+    Covers the network structure, the *raw* input parameters (the
+    prepared-weights digest is an output, not an input), the validation
+    set the mode search and gate measure against, the target device
+    identity, and every knob that steers the loop.  Two calls with equal
+    keys converge to the same artifact; anything else must never alias.
+    """
+    h = hashlib.sha256()
+    h.update(json.dumps(codec.encode_network(net), sort_keys=True).encode())
+    h.update(f"|device={device_identity}".encode())
+    h.update(f"|deg={max_degradation!r}|int8={allow_int8}"
+             f"|forced={getattr(forced_mode, 'value', None)!r}"
+             f"|fuse={fuse}|autotune={autotune}"
+             f"|iters={max_iterations}".encode())
+    h.update(b"|params:")
+    for name in sorted(params):
+        h.update(name.encode())
+        _hash_arrays(h, params[name])
+    if validation is None:
+        h.update(b"|validation:none")
+    else:
+        h.update(b"|validation:")
+        _hash_arrays(h, list(validation))
+    return h.hexdigest()[:24]
+
+
+class ArtifactStore:
+    """Versioned, integrity-checked on-disk store of synthesis artifacts.
+
+    All methods are process- and thread-safe through filesystem atomicity
+    (no in-process lock is needed: every write is temp+rename, every read
+    re-validates).  Failed integrity checks are *misses*, not errors —
+    the only exceptions that escape are programmer errors and unwritable
+    roots.
+    """
+
+    def __init__(self, root: str, *,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
+        self.root = str(root)
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        os.makedirs(os.path.join(self.root, "programs"), exist_ok=True)
+        os.makedirs(os.path.join(self.root, "index"), exist_ok=True)
+        reg = self.registry
+        self._hits = reg.counter(
+            "artifact_hits_total",
+            "Artifact-store loads that hydrated successfully", ("kind",))
+        self._misses = reg.counter(
+            "artifact_misses_total",
+            "Artifact-store lookups that found nothing usable", ("kind",))
+        self._writes = reg.counter(
+            "artifact_writes_total",
+            "Artifacts persisted to the store", ("kind",))
+        self._invalid = reg.counter(
+            "artifact_invalid_total",
+            "Artifacts rejected: tampered, truncated, or wrong schema "
+            "version", ("kind",))
+        self._hydrate_seconds = reg.counter(
+            "artifact_hydrate_seconds_total",
+            "Wall seconds spent hydrating artifacts from disk", ("kind",))
+        for c in (self._hits, self._misses, self._writes, self._invalid,
+                  self._hydrate_seconds):
+            for kind in ("program", "executable"):
+                c.inc(0, kind=kind)              # materialize zero series
+
+    # -- paths ---------------------------------------------------------------
+    def program_dir(self, fingerprint: str) -> str:
+        if not fingerprint or "/" in fingerprint or fingerprint.startswith("."):
+            raise ValueError(f"bad fingerprint {fingerprint!r}")
+        return os.path.join(self.root, "programs", fingerprint)
+
+    def _index_path(self, request_key: str) -> str:
+        if not request_key or "/" in request_key or request_key.startswith("."):
+            raise ValueError(f"bad request key {request_key!r}")
+        return os.path.join(self.root, "index", f"{request_key}.json")
+
+    # -- convenience counter reads (labels summed) ---------------------------
+    def _sum(self, counter) -> int:
+        return int(sum(counter.series().values()))
+
+    @property
+    def hits(self) -> int:
+        return self._sum(self._hits)
+
+    @property
+    def misses(self) -> int:
+        return self._sum(self._misses)
+
+    @property
+    def writes(self) -> int:
+        return self._sum(self._writes)
+
+    @property
+    def invalid(self) -> int:
+        return self._sum(self._invalid)
+
+    def stats(self) -> Dict[str, int]:
+        out = {}
+        for name, counter in (("hits", self._hits), ("misses", self._misses),
+                              ("writes", self._writes),
+                              ("invalid", self._invalid)):
+            for key, value in counter.series().items():
+                out[f"{name}_{key[0]}"] = int(value)
+            out[name] = self._sum(counter)
+        return out
+
+    # -- index: request key -> fingerprint -----------------------------------
+    def lookup(self, request_key: str) -> Optional[str]:
+        """The converged fingerprint a previous identical request produced,
+        or None.  A malformed or version-bumped index entry counts invalid
+        and reads as None (cold path)."""
+        path = self._index_path(request_key)
+        if not os.path.exists(path):
+            return None
+        try:
+            doc = _read_json(path)
+            if (not isinstance(doc, dict)
+                    or doc.get("schema_version") != ARTIFACT_SCHEMA_VERSION):
+                raise ArtifactError(
+                    f"index entry schema_version "
+                    f"{doc.get('schema_version')!r} != "
+                    f"{ARTIFACT_SCHEMA_VERSION}")
+            fp = doc.get("fingerprint")
+            if not isinstance(fp, str) or not fp:
+                raise ArtifactError("index entry carries no fingerprint")
+            return fp
+        except ArtifactError:
+            self._invalid.inc(kind="program")
+            return None
+
+    def _write_index(self, request_key: str, fingerprint: str) -> None:
+        _atomic_write_json(self._index_path(request_key), {
+            "schema_version": ARTIFACT_SCHEMA_VERSION,
+            "fingerprint": fingerprint})
+
+    # -- programs (Stages A-C + Stage B weights) -----------------------------
+    def put_program(self, program: "SynthesizedProgram", *,
+                    request_key: Optional[str] = None) -> str:
+        """Persist a synthesized program; returns its fingerprint.
+
+        Files land individually (atomic each), the manifest last: a
+        reader either sees a complete, digest-covered artifact or no
+        manifest at all.  With ``request_key`` the index entry is written
+        after the artifact, so an index hit always points at something.
+        """
+        fp = program.fingerprint()
+        d = self.program_dir(fp)
+        os.makedirs(d, exist_ok=True)
+
+        program_doc = codec.encode_program(program)
+        program_raw = (json.dumps(program_doc, indent=2, sort_keys=True)
+                       + "\n").encode()
+        entries, weights_blob = codec.encode_weights(program.prepared)
+        weights_doc_raw = (json.dumps(entries, sort_keys=True) + "\n").encode()
+
+        _atomic_write(os.path.join(d, "program.json"), program_raw)
+        _atomic_write(os.path.join(d, "weights.json"), weights_doc_raw)
+        _atomic_write(os.path.join(d, "weights.bin"), weights_blob)
+        _atomic_write_json(os.path.join(d, "manifest.json"), {
+            "schema_version": ARTIFACT_SCHEMA_VERSION,
+            "fingerprint": fp,
+            "net": program.net.name,
+            "files": {"program.json": _sha256(program_raw),
+                      "weights.json": _sha256(weights_doc_raw),
+                      "weights.bin": _sha256(weights_blob)},
+        })
+        if request_key is not None:
+            self._write_index(request_key, fp)
+        self._writes.inc(kind="program")
+        return fp
+
+    def _load_manifest(self, d: str) -> Dict[str, Any]:
+        path = os.path.join(d, "manifest.json")
+        if not os.path.exists(path):
+            raise FileNotFoundError(path)
+        doc = _read_json(path)
+        if not isinstance(doc, dict):
+            raise ArtifactError(f"{path}: manifest must be a JSON object")
+        if doc.get("schema_version") != ARTIFACT_SCHEMA_VERSION:
+            raise ArtifactError(
+                f"{path}: unknown artifact schema_version "
+                f"{doc.get('schema_version')!r} (this build reads "
+                f"{ARTIFACT_SCHEMA_VERSION}); refusing to guess")
+        return doc
+
+    def load_program(self, fingerprint: str
+                     ) -> "Optional[SynthesizedProgram]":
+        """Hydrate Stages A–C from disk, or None (counted hit/miss/invalid).
+
+        Integrity: every file's sha256 must match the manifest, and the
+        *recomputed* fingerprint of the decoded program must equal both
+        the requested fingerprint and the manifest's claim.
+        """
+        d = self.program_dir(fingerprint)
+        t0 = self.registry.clock()
+        span = (self.tracer.span("serve.artifact_hydrate", kind="program",
+                                 fingerprint=fingerprint)
+                if self.tracer is not None else None)
+        try:
+            if span is not None:
+                span.__enter__()
+            try:
+                manifest = self._load_manifest(d)
+            except FileNotFoundError:
+                self._misses.inc(kind="program")
+                return None
+            raws: Dict[str, bytes] = {}
+            for name in _PROGRAM_FILES:
+                path = os.path.join(d, name)
+                if not os.path.exists(path):
+                    raise ArtifactError(f"{d}: missing {name}")
+                with open(path, "rb") as f:
+                    raws[name] = f.read()
+                want = manifest.get("files", {}).get(name)
+                got = _sha256(raws[name])
+                if want != got:
+                    raise ArtifactError(
+                        f"{d}/{name}: sha256 mismatch (manifest {want}, "
+                        f"file {got}) — corrupt or tampered")
+            program_doc = json.loads(raws["program.json"].decode())
+            entries = json.loads(raws["weights.json"].decode())
+            prepared = codec.decode_weights(entries, raws["weights.bin"])
+            program = codec.decode_program(program_doc, prepared)
+            recomputed = program.fingerprint()
+            claimed = manifest.get("fingerprint")
+            if recomputed != fingerprint or claimed != fingerprint:
+                raise ArtifactError(
+                    f"{d}: fingerprint mismatch — requested {fingerprint}, "
+                    f"manifest claims {claimed}, content hashes to "
+                    f"{recomputed}; refusing to hydrate a program that is "
+                    "not what it says it is")
+            self._hits.inc(kind="program")
+            self._hydrate_seconds.inc(self.registry.clock() - t0,
+                                      kind="program")
+            return program
+        except (ArtifactError, ArtifactCodecError,
+                json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+            self._invalid.inc(kind="program")
+            self._misses.inc(kind="program")
+            if self.tracer is not None:
+                self.tracer.event("serve.artifact_invalid", kind="program",
+                                  fingerprint=fingerprint, error=str(e))
+            return None
+        finally:
+            if span is not None:
+                span.__exit__(None, None, None)
+
+    def load_program_for(self, request_key: str
+                         ) -> "Optional[SynthesizedProgram]":
+        """Index lookup + hydrate in one step (what ``synthesize`` calls)."""
+        fp = self.lookup(request_key)
+        if fp is None:
+            self._misses.inc(kind="program")
+            return None
+        return self.load_program(fp)
+
+    # -- Stage-D executables -------------------------------------------------
+    def _exec_paths(self, fingerprint: str, batch: int):
+        d = self.program_dir(fingerprint)
+        return (os.path.join(d, f"exec_b{int(batch)}.bin"),
+                os.path.join(d, f"exec_b{int(batch)}.json"))
+
+    def put_executable(self, program: "SynthesizedProgram",
+                       batch: int) -> bool:
+        """Export + persist one Stage-D bucket; False on plan-only fallback.
+
+        The blob lands before its sidecar meta (meta-last mirrors
+        manifest-last: a meta that exists always describes a complete
+        blob).  Unexportable programs degrade silently to plan-only —
+        recorded as a trace event, never an exception on the serving path.
+        """
+        fp = program.fingerprint()
+        d = self.program_dir(fp)
+        os.makedirs(d, exist_ok=True)
+        try:
+            blob, meta = codec.export_executable(program, batch)
+        except ArtifactCodecError as e:
+            if self.tracer is not None:
+                self.tracer.event("serve.artifact_plan_only",
+                                  fingerprint=fp, batch=batch, error=str(e))
+            return False
+        bin_path, meta_path = self._exec_paths(fp, batch)
+        meta = dict(meta)
+        meta["schema_version"] = ARTIFACT_SCHEMA_VERSION
+        meta["sha256"] = _sha256(blob)
+        meta["fingerprint"] = fp
+        _atomic_write(bin_path, blob)
+        _atomic_write_json(meta_path, meta)
+        self._writes.inc(kind="executable")
+        return True
+
+    def load_executable(self, program: "SynthesizedProgram",
+                        batch: int) -> "Optional[BatchProgram]":
+        """Hydrate one Stage-D bucket, or None (the caller recompiles).
+
+        Misses split three ways: absent (plain miss), stamp mismatch
+        (foreign jaxlib/platform — plan-only fallback, a miss but *not*
+        invalid), and integrity/schema failure (tampered/truncated/
+        version-bumped — counted ``artifact_invalid_total``).
+        """
+        fp = program.fingerprint()
+        bin_path, meta_path = self._exec_paths(fp, batch)
+        if not os.path.exists(meta_path):
+            self._misses.inc(kind="executable")
+            return None
+        t0 = self.registry.clock()
+        span = (self.tracer.span("serve.artifact_hydrate", kind="executable",
+                                 fingerprint=fp, batch=batch)
+                if self.tracer is not None else None)
+        try:
+            if span is not None:
+                span.__enter__()
+            meta = _read_json(meta_path)
+            if (not isinstance(meta, dict)
+                    or meta.get("schema_version") != ARTIFACT_SCHEMA_VERSION):
+                raise ArtifactError(
+                    f"{meta_path}: unknown executable schema_version")
+            ok, why = codec.stamp_matches(meta)
+            if not ok:
+                # Foreign environment, not corruption: plan-only fallback.
+                self._misses.inc(kind="executable")
+                if self.tracer is not None:
+                    self.tracer.event("serve.artifact_plan_only",
+                                      fingerprint=fp, batch=batch,
+                                      error=why)
+                return None
+            with open(bin_path, "rb") as f:
+                blob = f.read()
+            if _sha256(blob) != meta.get("sha256"):
+                raise ArtifactError(
+                    f"{bin_path}: sha256 mismatch — corrupt or truncated")
+            compiled = codec.hydrate_executable(program, batch, blob, meta)
+            self._hits.inc(kind="executable")
+            self._hydrate_seconds.inc(self.registry.clock() - t0,
+                                      kind="executable")
+            return compiled
+        except (ArtifactError, ArtifactCodecError, OSError) as e:
+            self._invalid.inc(kind="executable")
+            self._misses.inc(kind="executable")
+            if self.tracer is not None:
+                self.tracer.event("serve.artifact_invalid",
+                                  kind="executable", fingerprint=fp,
+                                  batch=batch, error=str(e))
+            return None
+        finally:
+            if span is not None:
+                span.__exit__(None, None, None)
+
+    def executables(self, fingerprint: str) -> Dict[int, str]:
+        """batch -> blob path for every persisted bucket of a program."""
+        d = self.program_dir(fingerprint)
+        out: Dict[int, str] = {}
+        if not os.path.isdir(d):
+            return out
+        for name in sorted(os.listdir(d)):
+            if name.startswith("exec_b") and name.endswith(".json"):
+                try:
+                    batch = int(name[len("exec_b"):-len(".json")])
+                except ValueError:
+                    continue
+                out[batch] = os.path.join(d, f"exec_b{batch}.bin")
+        return out
+
+    def __repr__(self) -> str:
+        return f"ArtifactStore({self.root!r})"

@@ -364,7 +364,8 @@ def synthesize(net: NetworkDescription,
                forced_mode: Optional[ComputeMode] = None,
                fuse: bool = True,
                tracer: Optional[Tracer] = None,
-               registry: Optional[MetricsRegistry] = None
+               registry: Optional[MetricsRegistry] = None,
+               artifact_store: Optional[object] = None
                ) -> SynthesizedProgram:
     """Run the full Cappuccino pipeline and return the synthesized program.
 
@@ -410,6 +411,15 @@ def synthesize(net: NetworkDescription,
     Stage-C probe, the validation gate and its demotion events);
     ``registry=`` accumulates ``synthesis_*`` counters.  Both default to
     off — synthesis pays nothing unless observed (DESIGN.md §12).
+
+    ``artifact_store=`` (an :class:`~repro.artifacts.ArtifactStore`)
+    makes synthesis *restartable*: before Stage A the store is consulted
+    under a request key covering every input that determines the result
+    (network, raw params, validation set, device identity, all knobs); a
+    hit hydrates the converged program — validated report included — with
+    **zero fixed-point iterations**, and a miss persists the converged
+    result for the next process (DESIGN.md §13).  Bypassed when ``plan=``
+    is supplied: a caller pinning the plan is steering synthesis by hand.
     """
     t0 = time.time()
     if max_iterations < 1:
@@ -421,6 +431,10 @@ def synthesize(net: NetworkDescription,
             registry.counter(name, help).inc(amount)
 
     _count("synthesis_runs_total", 1, "synthesize() invocations")
+    # Materialized at zero up front: an artifact-store hit returns before
+    # the loop, and "zero iterations" must be a reading, not a missing
+    # series (the warm-start acceptance assertion reads it).
+    _count("synthesis_iterations_total", 0, "Fixed-point plan/probe rounds")
 
     # Device selection: the target profile flows into the planner config
     # (cost rules) and every plan built here (fingerprint identity).
@@ -444,6 +458,40 @@ def synthesize(net: NetworkDescription,
             "re-planning would silently switch devices — align the two "
             "profiles (dataclasses.replace(planner_config, "
             "profile=plan.profile)) or re-plan for the target")
+
+    # Persistent-artifact consultation (DESIGN.md §13): a previous
+    # identical request's converged program hydrates wholesale — Stages
+    # A–C skipped, zero fixed-point iterations, the validated report
+    # restored from disk.  The request key hashes everything that
+    # determines the result, so a hit can only return what this call
+    # would have synthesized.  Imported lazily: repro.artifacts depends
+    # on this module.
+    store_request_key: Optional[str] = None
+    if artifact_store is not None and plan is None:
+        from ..artifacts.store import synthesis_request_key
+        key_profile = (planner_config.profile if planner_config is not None
+                       else PlannerConfig().profile)
+        store_request_key = synthesis_request_key(
+            net, params, validation=validation,
+            device_identity=key_profile.identity(),
+            max_degradation=max_degradation, allow_int8=allow_int8,
+            forced_mode=forced_mode, fuse=fuse, autotune=autotune,
+            max_iterations=max_iterations)
+        cached = artifact_store.load_program_for(store_request_key)
+        if cached is not None:
+            _t.event("synthesis.artifact_hit", net=net.name,
+                     fingerprint=cached.fingerprint())
+            return cached
+
+    def _store_put(program: SynthesizedProgram) -> None:
+        if artifact_store is None or store_request_key is None:
+            return
+        try:
+            artifact_store.put_program(program,
+                                       request_key=store_request_key)
+        except OSError as e:           # unwritable store never fails synthesis
+            _t.event("synthesis.artifact_put_failed", net=net.name,
+                     error=str(e))
 
     # Stage A: primary program synthesis -> ExecutionPlan artifact.
     # Graph lowering happens first (fuse=True): the pass pipeline decides
@@ -507,6 +555,7 @@ def synthesize(net: NetworkDescription,
             prepared=_prepare_params(net, params, modes))
         _count("synthesis_seconds_total", program.synthesis_seconds,
                "Wall seconds spent inside synthesize()")
+        _store_put(program)
         return program
 
     # ---- Fixed-point loop: plan -> mode probe -> re-plan -> re-probe ------
@@ -669,4 +718,5 @@ def synthesize(net: NetworkDescription,
     program.synthesis_seconds = time.time() - t0
     _count("synthesis_seconds_total", program.synthesis_seconds,
            "Wall seconds spent inside synthesize()")
+    _store_put(program)
     return program

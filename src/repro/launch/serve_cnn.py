@@ -13,6 +13,15 @@ latency percentiles, per-replica warm-up (cold start) times, shed count,
 and a metrics snapshot rendered from the tier's registry
 (``repro.obs``).  ``--metrics-out``/``--trace-out`` export the snapshot
 (JSON) and the trace spans (JSONL) for offline analysis.
+
+``--artifact-dir PATH`` attaches a persistent
+:class:`~repro.artifacts.ArtifactStore` (DESIGN.md §13): the first launch
+synthesizes and compiles cold while persisting every artifact; subsequent
+launches against the same directory hydrate the converged program (zero
+synthesis iterations) and the serialized Stage-D executables (zero
+compiles) — the banner reports how many compiles the warm start avoided,
+and the ``artifact_*`` hit/miss/hydrate counters appear in the snapshot
+table alongside the cache series.
 """
 from __future__ import annotations
 
@@ -46,6 +55,9 @@ def main():
                     help="per-replica admission bound; 0 = unbounded")
     ap.add_argument("--mode", default="relaxed",
                     choices=[m.value for m in ComputeMode])
+    ap.add_argument("--artifact-dir", default=None, metavar="PATH",
+                    help="persistent artifact store: synthesize/compile "
+                         "cold once, start warm forever after")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write a JSON metrics snapshot here")
@@ -59,16 +71,28 @@ def main():
     print(f"synthesizing {net.name} ({len(net.layers)} layers)...")
     registry = MetricsRegistry()
     tracer = Tracer(clock=registry.clock)
+    store = None
+    if args.artifact_dir:
+        from repro.artifacts import ArtifactStore
+        store = ArtifactStore(args.artifact_dir, registry=registry,
+                              tracer=tracer)
     program = synthesize(net, params, forced_mode=ComputeMode(args.mode),
-                         registry=registry, tracer=tracer)
-    print(f"  stages A-C in {program.synthesis_seconds:.2f}s, "
-          f"program {program.fingerprint()}")
+                         registry=registry, tracer=tracer,
+                         artifact_store=store)
+    if store is not None and store.hits:
+        print(f"  program hydrated from {args.artifact_dir} "
+              "(zero synthesis iterations), "
+              f"program {program.fingerprint()}")
+    else:
+        print(f"  stages A-C in {program.synthesis_seconds:.2f}s, "
+              f"program {program.fingerprint()}")
 
     config = ServingConfig(max_batch=args.max_batch,
                            max_delay_s=args.max_delay_ms / 1e3,
                            replicas=args.replicas,
                            dispatch=args.dispatch,
-                           max_queue_depth=args.max_queue_depth)
+                           max_queue_depth=args.max_queue_depth,
+                           artifact_dir=args.artifact_dir)
     report = run_offered_load(program, requests=args.requests,
                               rate=args.rate, config=config, seed=args.seed,
                               registry=registry, tracer=tracer)
@@ -85,6 +109,13 @@ def main():
           f"stolen {tier['stolen_requests']}  peak depth {tier['peak_depth']}")
     warm = ", ".join(f"r{i}={s:.2f}s" for i, s in enumerate(report.warm_seconds))
     print(f"cold start (warm-up): {warm}")
+    if args.artifact_dir:
+        hits = report.registry.get("artifact_hits_total")
+        avoided = int(hits.value(kind="executable")) if hits else 0
+        print(f"warm start: {avoided} compile(s) avoided via "
+              f"{args.artifact_dir}" if avoided else
+              f"cold start: artifacts persisted to {args.artifact_dir} "
+              "(next launch starts warm)")
     print("\nmetrics snapshot:")
     print(render_table(report.registry))
 

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
+from typing import Optional
 
 from .batcher import FlushPolicy
 
@@ -56,6 +57,13 @@ class ServingConfig:
       finds every replica's queue at this depth is load-shed with a typed
       :class:`~repro.serving.dispatch.LoadShedError` instead of growing a
       queue without bound.  0 disables admission control.
+
+    Persistent artifacts (consumed by :class:`~repro.serving.replica.
+    ReplicaSet`, which builds an :class:`~repro.artifacts.ArtifactStore`
+    as the shared cache's level 3 — DESIGN.md §13):
+
+    * ``artifact_dir`` — on-disk artifact store root; ``None`` (default)
+      disables persistence and every process start is cold.
     """
     # -- bucket policy ------------------------------------------------------
     max_batch: int = 8
@@ -67,6 +75,8 @@ class ServingConfig:
     replicas: int = 1
     dispatch: str = "least_loaded"
     max_queue_depth: int = 64
+    # -- persistent artifacts -----------------------------------------------
+    artifact_dir: Optional[str] = None
 
     def __post_init__(self):
         # FlushPolicy owns the bucket-policy invariants; building one here

@@ -11,6 +11,18 @@ split (DESIGN.md §6):
            :class:`BatchProgram` — Stage D, an AOT XLA compile for one
            fixed batch shape.  Power-of-two buckets keep this level's
            cardinality at ``log2(max_batch) + 1`` per program.
+  level 3  *(optional, persistent)* an :class:`~repro.artifacts.
+           ArtifactStore`: before compiling, a level-2 miss first tries to
+           hydrate the bucket's serialized executable from disk; after a
+           compile, the executable is written back — so the *next process*
+           starts warm with zero Stage-D compiles (DESIGN.md §13).
+
+Concurrency: level-2 lookups and bookkeeping run under one cache-wide
+lock, but compiles and disk hydrations run under **per-key in-flight
+locks** (double-checked) — replicas warming *different* buckets
+compile/hydrate concurrently, while racing callers for the *same* bucket
+still produce exactly one compile (the rest block briefly and read the
+fresh entry as hits).
 
 The program fingerprint (``SynthesizedProgram.fingerprint``) is the plan's
 dispatch-content hash (``ExecutionPlan.fingerprint``) plus a digest of the
@@ -149,7 +161,8 @@ class ProgramCache:
     def __init__(self, max_entries: Optional[int] = None, *,
                  config: "Optional[ServingConfig]" = None,
                  registry: Optional[MetricsRegistry] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 store: "Optional[object]" = None):
         from .config import ServingConfig
 
         if max_entries is not None:
@@ -171,13 +184,17 @@ class ProgramCache:
         #: metrics so one snapshot covers cache + batcher + dispatch.
         self.registry = self.stats.registry
         self.tracer = tracer
+        #: Level 3: persistent :class:`~repro.artifacts.ArtifactStore`
+        #: (or None).  Hydrate-before-compile, write-back-after-miss.
+        self.store = store
         # One cache may back several servers' dispatch threads (shared
-        # compiled buckets across replicas) — guard all mutation.  Compiles
-        # run under the lock: slower first hit, but a bucket is never
-        # compiled twice.
+        # compiled buckets across replicas) — the cache-wide lock guards
+        # the maps; compiles/hydrations happen under per-key in-flight
+        # locks so distinct buckets build concurrently.
         self._lock = threading.Lock()
         self._programs: Dict[Tuple[str, str], SynthesizedProgram] = {}
         self._compiled: "OrderedDict[CacheKey, BatchProgram]" = OrderedDict()
+        self._inflight: Dict[CacheKey, threading.Lock] = {}
 
     # -- level 1: plan-time artifacts ---------------------------------------
     def admit(self, program: SynthesizedProgram) -> str:
@@ -203,36 +220,71 @@ class ProgramCache:
 
         ``program`` must have been :meth:`admit`-ted (enforced so the
         serving layer cannot leak unkeyed programs into the cache).
-        Thread-safe: concurrent callers for the same ``(network, bucket)``
-        serialize on the cache lock and exactly one of them compiles — the
-        rest read the fresh entry as hits.
+
+        Thread-safe with two lock granularities.  The cache-wide lock
+        covers only map lookups/insertions; the actual build — an L3
+        hydration or a Stage-D compile, both potentially seconds — runs
+        under a **per-key** lock.  Racing callers for the same bucket
+        serialize on that key's lock and exactly one builds (the waiters
+        double-check and count hits); callers for *different* buckets
+        never wait on each other, which is what lets N replicas warm N
+        buckets concurrently (pinned by
+        tests/test_program_cache_concurrency.py).
         """
         fp = program.fingerprint()
+        key: CacheKey = (program.net.name, batch, fp)
         with self._lock:
             if (program.net.name, fp) not in self._programs:
                 raise KeyError(
                     f"program {program.net.name!r} (plan {fp}) not admitted; "
                     f"call ProgramCache.admit(program) first")
-            key: CacheKey = (program.net.name, batch, fp)
             hit = self._compiled.get(key)
             if hit is not None:
                 self._compiled.move_to_end(key)
                 self.stats.hit()
                 return hit
-            self.stats.miss()
-            if self.tracer is not None:
-                with self.tracer.span("synthesis.stage_d_compile",
-                                      net=program.net.name, batch=batch) as s:
+            keylock = self._inflight.get(key)
+            if keylock is None:
+                keylock = self._inflight[key] = threading.Lock()
+        with keylock:
+            # Double-check: the thread that held this key's lock before us
+            # may have just built the entry.
+            with self._lock:
+                hit = self._compiled.get(key)
+                if hit is not None:
+                    self._compiled.move_to_end(key)
+                    self.stats.hit()
+                    return hit
+                self.stats.miss()
+            compiled: Optional[BatchProgram] = None
+            if self.store is not None:
+                # Level 3: hydrate the serialized executable — zero
+                # Stage-D compiles on this path (the store counts the
+                # hit/miss/invalid and the hydrate span).
+                compiled = self.store.load_executable(program, batch)
+            if compiled is None:
+                if self.tracer is not None:
+                    with self.tracer.span(
+                            "synthesis.stage_d_compile",
+                            net=program.net.name, batch=batch) as s:
+                        compiled = program.for_batch(batch)
+                        if s is not None:
+                            s.attrs["compile_seconds"] = \
+                                compiled.compile_seconds
+                else:
                     compiled = program.for_batch(batch)
-                    if s is not None:
-                        s.attrs["compile_seconds"] = compiled.compile_seconds
-            else:
-                compiled = program.for_batch(batch)
-            self.stats.compiled(compiled.compile_seconds)
-            self._compiled[key] = compiled
-            while len(self._compiled) > self.max_entries:
-                self._compiled.popitem(last=False)
-                self.stats.evicted()
+                self.stats.compiled(compiled.compile_seconds)
+                if self.store is not None:
+                    try:          # write-back is best-effort persistence
+                        self.store.put_executable(program, batch)
+                    except OSError:
+                        pass
+            with self._lock:
+                self._compiled[key] = compiled
+                self._inflight.pop(key, None)
+                while len(self._compiled) > self.max_entries:
+                    self._compiled.popitem(last=False)
+                    self.stats.evicted()
             return compiled
 
     def __len__(self) -> int:
